@@ -1,0 +1,81 @@
+"""Kernel micro-bench: CPU wall time of the jnp reference implementations
+(flash/SSD/RG-LRU oracles) at smoke scale, plus interpret-mode kernel parity
+timing.  On this CPU container the numbers are NOT TPU performance — the TPU
+story is the dry-run roofline — but the bench keeps the kernels exercised
+and regression-guarded end to end.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time(f, *args, repeats=3):
+    import jax
+
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.ssd_scan import ssd_scan
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # attention oracle (the XLA path the dry-run lowers)
+    B, Hq, Hkv, S, D = 1, 8, 2, 512, 64
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    att = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
+    rows.append(("attention_ref_512", _time(att, q, k, v)))
+
+    # SSD: chunked kernel (interpret) vs sequential oracle
+    B, S, H, P, N = 1, 256, 4, 32, 16
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((H,)), jnp.float32)
+    ssd_ref = jax.jit(lambda *args: ref.ssd(*args))
+    rows.append(("ssd_ref_seq_256", _time(ssd_ref, x, dt, a, bm, cm, d)))
+    rows.append((
+        "ssd_pallas_interp_256",
+        _time(lambda *args: ssd_scan(*args, block_q=64, interpret=True),
+              x, dt, a, bm, cm, d),
+    ))
+
+    # RG-LRU oracle
+    B, S, W = 2, 512, 64
+    xr = jnp.asarray(rng.standard_normal((B, S, W)), jnp.float32)
+    gx = jnp.asarray(rng.standard_normal((B, S, W)), jnp.float32)
+    ga = jnp.asarray(rng.standard_normal((B, S, W)), jnp.float32)
+    ap = jnp.asarray(rng.standard_normal((W,)), jnp.float32)
+    rg = jax.jit(lambda *args: ref.rglru(*args))
+    rows.append(("rglru_ref_512", _time(rg, xr, gx, ga, ap)))
+    return rows
+
+
+def main():
+    rows = run()
+    lines = [f"{'kernel':>24s} {'us/call':>12s}"]
+    for name, us in rows:
+        lines.append(f"{name:>24s} {us:12.0f}")
+    return "\n".join(lines), rows
+
+
+if __name__ == "__main__":
+    print(main()[0])

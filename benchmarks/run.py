@@ -1,0 +1,75 @@
+"""Benchmark aggregator: one section per paper table/figure + beyond-paper
+benches.  ``python -m benchmarks.run [--quick]``."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+# Scheduler math (closed forms vs simulation) wants f64; model/kernel code
+# pins its own dtypes explicitly so this only affects the core benchmarks.
+jax.config.update("jax_enable_x64", True)
+
+
+def _section(title):
+    print("\n" + "=" * 72)
+    print(title)
+    print("=" * 72, flush=True)
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t0 = time.time()
+
+    _section("Fig 3 — heSRPT 3-job trace (s(k)=k^0.5, N=500)")
+    from benchmarks import fig3_trace
+
+    text, _ = fig3_trace.main()
+    print(text)
+
+    _section("Thm 8 — simulator vs closed-form optimal total flow time")
+    from benchmarks import theorem8
+
+    text, worst = theorem8.main()
+    print(text)
+    assert worst < 1e-6, "Theorem 8 closed form mismatch"
+
+    _section("Thm 2 — heLRPT makespan closed form + tradeoff vs heSRPT")
+    from benchmarks import makespan
+
+    text, ok = makespan.main()
+    print(text)
+    assert ok, "Theorem 2 checks failed"
+
+    _section("Fig 4 — heSRPT vs SRPT/EQUI/HELL/KNEE "
+             + ("(quick)" if quick else "(paper scale: M=500, 10 seeds)"))
+    from benchmarks import fig4_policies
+
+    text, _ = fig4_policies.main(quick=quick)
+    print(text)
+
+    _section("Beyond paper — Poisson arrival stream (paper §4.3 heuristic)")
+    from benchmarks import arrivals
+
+    text, _ = arrivals.main()
+    print(text)
+
+    _section("Beyond paper — scheduler decision cost at cluster scale")
+    from benchmarks import sched_scale
+
+    text, _ = sched_scale.main()
+    print(text)
+
+    _section("Beyond paper — kernel micro-bench (CPU; TPU story = roofline)")
+    from benchmarks import kernels_bench
+
+    text, _ = kernels_bench.main()
+    print(text)
+
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Batched serving with KV caches: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mixtral-8x7b
+
+Uses the smoke-scale config of the chosen architecture (any of the 10
+assigned archs works — SSM/hybrid archs carry state caches instead of KV).
+Demonstrates the ring-buffer sliding-window cache: for mixtral the cache
+capacity is the SWA window, not the sequence length.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCH_IDS, smoke_config  # noqa: E402
+from repro.launch.serve import generate  # noqa: E402
+from repro.models import ModelOptions, build_model  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b", choices=list(ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen-len", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = build_model(cfg, ModelOptions(activation_dtype="float32", remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.n_patches, cfg.d_model)),
+            jnp.float32) * 0.02
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32) * 0.02
+
+    t0 = time.time()
+    ids = generate(model, params, batch, gen_len=args.gen_len)
+    dt = time.time() - t0
+    print(f"arch={args.arch} ({cfg.family})  batch={args.batch}")
+    print(f"prefill {args.prompt_len} + decode {args.gen_len}: {dt:.2f}s "
+          f"({args.batch*args.gen_len/dt:.1f} tok/s on CPU)")
+    if cfg.window:
+        _, caches = model.prefill_fn(params, batch,
+                                     max_len=args.prompt_len + args.gen_len)
+        k = jax.tree.leaves(caches)[0]
+        print(f"sliding-window ring cache: capacity {k.shape} "
+              f"(window={cfg.window}, not seq)")
+    print("first sequence:", np.asarray(ids[0])[:16], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Architecture & shape registry.
+
+``get_config(arch_id)`` returns the exact published full-size config;
+``smoke_config(arch_id)`` returns a reduced config of the same family that
+runs a forward/train step on one CPU device in a test.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import (
+    SHAPE_BY_NAME,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cell_applicable,
+)
+from repro.configs import (
+    internvl2_1b,
+    mamba2_130m,
+    mixtral_8x7b,
+    phi4_mini,
+    qwen15_110b,
+    qwen25_14b,
+    qwen3_moe_235b,
+    recurrentgemma_9b,
+    stablelm_12b,
+    whisper_base,
+)
+
+_REGISTRY = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen25_14b,
+        phi4_mini,
+        stablelm_12b,
+        qwen15_110b,
+        mamba2_130m,
+        internvl2_1b,
+        recurrentgemma_9b,
+        mixtral_8x7b,
+        qwen3_moe_235b,
+        whisper_base,
+    )
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return _REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced config of the same family: few layers, narrow width, tiny
+    vocab, few experts — runs a fwd/train step on one CPU device."""
+    cfg = get_config(arch_id)
+    small = dict(
+        n_layers=2,
+        d_model=64,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        rope_theta=10000.0,
+    )
+    if cfg.n_heads:
+        small.update(n_heads=4, n_kv_heads=max(1, min(cfg.n_kv_heads, 2)), head_dim=16)
+    if cfg.n_experts:
+        small.update(n_experts=4, top_k=min(cfg.top_k, 2))
+    if cfg.family == "ssm":
+        small.update(ssm_state=16, ssm_head_dim=16)
+    if cfg.family == "hybrid":
+        small.update(n_layers=3, lru_width=64, window=16)
+    elif cfg.window:
+        small.update(window=16)
+    if cfg.is_encdec:
+        small.update(encoder_layers=2, encoder_seq=8)
+    if cfg.n_patches:
+        small.update(n_patches=4)
+    return cfg.scaled(**small)
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "SHAPE_BY_NAME",
+    "ModelConfig",
+    "ShapeConfig",
+    "cell_applicable",
+    "get_config",
+    "smoke_config",
+]

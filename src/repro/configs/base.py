@@ -1,0 +1,209 @@
+"""Config dataclasses shared by every architecture and shape.
+
+``ModelConfig`` is the single source of truth a model is built from —
+``models.model.build_model(cfg)`` dispatches on ``cfg.family``.  ``ShapeConfig``
+describes one cell of the assigned (architecture x input-shape) grid.
+
+Everything is a frozen dataclass (hashable -> usable as a jit static arg).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Tuple
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture.  Field semantics:
+
+    - ``family``: dispatch key — dense | moe | ssm | hybrid | vlm | audio.
+    - ``n_heads`` / ``n_kv_heads``: GQA query / key-value head counts.
+    - ``head_dim``: per-head dim (decoupled from ``d_model // n_heads`` —
+      qwen3-moe uses 128 with d_model=4096, 64 heads).
+    - ``d_ff``: MLP hidden (for MoE: the *per-expert* hidden).
+    - ``window``: sliding-window size for SWA / local attention; 0 = full.
+    - ``layer_pattern``: repeating mixer pattern for hybrids, e.g.
+      ``("rglru", "rglru", "attn")`` for recurrentgemma's 2:1.
+    - ``encoder_layers`` / ``encoder_seq``: whisper-style encoder stack; the
+      conv/audio frontend is a stub — ``input_specs`` hands the encoder
+      precomputed frame embeddings of length ``encoder_seq``.
+    - ``n_patches``: vlm stub — precomputed patch embeddings prepended to the
+      token sequence.
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    # hybrid (recurrentgemma)
+    layer_pattern: Tuple[str, ...] = ()
+    lru_width: int = 0
+    # attention variant
+    window: int = 0
+    rope_theta: float = 10000.0
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # vlm
+    n_patches: int = 0
+    # numerics
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"  # master copy; compute casts per train config
+    source: str = ""  # provenance tag: [hf:... | arXiv:... ; tier]
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.family == "hybrid" and not self.layer_pattern:
+            raise ValueError("hybrid family needs a layer_pattern")
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_is_subquadratic(self) -> bool:
+        """True iff the arch can decode at 500k context without O(S^2) attention
+        or an unbounded KV cache: SSM, or every attention layer windowed."""
+        if self.family == "ssm":
+            return True
+        if self.family == "hybrid":
+            return self.window > 0  # local attention layers are windowed
+        return self.window > 0  # SWA (mixtral)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS = 6*N*D)."""
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top_k experts only)."""
+        return _param_count(self, active_only=True)
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """A reduced-config variant of the same family (for smoke tests)."""
+        return dataclasses.replace(self, **overrides)
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    d, hd = cfg.d_model, cfg.head_dim
+    q = d * cfg.n_heads * hd
+    kv = 2 * d * cfg.n_kv_heads * hd
+    o = cfg.n_heads * hd * d
+    bias = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd if cfg.qkv_bias else 0
+    return q + kv + o + bias
+
+
+def _mlp_params(cfg: ModelConfig) -> int:
+    if cfg.family == "audio":
+        return 2 * cfg.d_model * cfg.d_ff  # whisper: 2-matrix GELU MLP
+    return 3 * cfg.d_model * cfg.d_ff  # SwiGLU: gate + up + down
+
+
+def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d = cfg.d_model
+    emb = cfg.vocab_size * d
+    out = 0 if cfg.tie_embeddings else cfg.vocab_size * d
+    n = emb + out + d  # final norm
+
+    if cfg.family == "ssm":
+        # mamba2 block: in_proj (z, x, B, C, dt) + conv + out_proj + norm.
+        di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        in_proj = d * (2 * di + 2 * ds + nh)
+        conv = cfg.ssm_conv * (di + 2 * ds)
+        out_proj = di * d
+        per_layer = in_proj + conv + out_proj + nh * 2 + di + d  # A,D,gnorm,norm
+        return n + cfg.n_layers * per_layer
+
+    def attn_block():
+        return _attn_params(cfg) + 2 * d  # two norms
+
+    def mlp_block(active: bool):
+        if cfg.n_experts:
+            experts = cfg.top_k if (active and active_only) else cfg.n_experts
+            return experts * _mlp_params(cfg) + d * cfg.n_experts  # + router
+        return _mlp_params(cfg)
+
+    if cfg.family == "hybrid":
+        lw = cfg.lru_width or d
+        # rglru mixer: rec-in + gelu-gate + out projections, depthwise conv,
+        # diagonal recurrence/input gates + Lambda, two norms (mixer + mlp).
+        rglru = 3 * d * lw + 4 * lw + 5 * lw + 2 * d
+        per_pattern = 0
+        for kind in cfg.layer_pattern:
+            per_pattern += (attn_block() if kind == "attn" else rglru) + mlp_block(
+                active_only
+            )
+        n_pat = cfg.n_layers // len(cfg.layer_pattern)
+        tail = cfg.n_layers - n_pat * len(cfg.layer_pattern)
+        return n + n_pat * per_pattern + tail * (rglru + mlp_block(active_only))
+
+    per_layer = attn_block() + mlp_block(active_only)
+    total = n + cfg.n_layers * per_layer
+    if cfg.is_encdec:
+        # encoder self-attn + mlp, decoder adds cross-attn per layer.
+        enc_layer = attn_block() + _mlp_params(cfg)
+        total += cfg.encoder_layers * enc_layer + cfg.n_layers * attn_block()
+    return total
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell.  ``kind`` picks which step gets lowered:
+    train -> train_step; prefill -> prefill step; decode -> serve_step (one
+    new token against a KV cache of ``seq_len``)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    def __post_init__(self):
+        if self.kind not in ("train", "prefill", "decode"):
+            raise ValueError(f"bad shape kind {self.kind}")
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", seq_len=4_096, global_batch=256, kind="train"),
+    ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill"),
+    ShapeConfig("decode_32k", seq_len=32_768, global_batch=128, kind="decode"),
+    ShapeConfig("long_500k", seq_len=524_288, global_batch=1, kind="decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason).  long_500k needs sub-quadratic attention; every arch
+    here has a decoder so decode shapes always run (whisper's 32k KV is far
+    beyond its 448 positions — exercised mechanically per the grid spec)."""
+    if shape.name == "long_500k" and not cfg.attention_is_subquadratic:
+        return False, "pure full-attention stack: 500k decode needs sub-quadratic attention"
+    return True, ""

@@ -1,0 +1,6 @@
+"""Input-shape grid (re-export; definitions live in base.py next to
+ModelConfig so the two dataclasses stay in one import)."""
+
+from repro.configs.base import SHAPES, SHAPE_BY_NAME, ShapeConfig, cell_applicable
+
+__all__ = ["SHAPES", "SHAPE_BY_NAME", "ShapeConfig", "cell_applicable"]

@@ -1,0 +1,43 @@
+"""Core heSRPT math: policies, closed forms, fluid simulator, diagnostics."""
+
+from repro.core.flowtime import (
+    hesrpt_completion_times,
+    hesrpt_mean_flowtime,
+    hesrpt_total_flowtime,
+    omega_star,
+    optimal_makespan,
+    speedup,
+)
+from repro.core.policies import (
+    POLICY_NAMES,
+    equi,
+    helrpt,
+    hell,
+    hesrpt,
+    knee,
+    make_policy,
+    size_ranks_desc,
+    srpt,
+)
+from repro.core.simulator import SimResult, simulate, total_flowtime
+
+__all__ = [
+    "POLICY_NAMES",
+    "SimResult",
+    "equi",
+    "helrpt",
+    "hell",
+    "hesrpt",
+    "hesrpt_completion_times",
+    "hesrpt_mean_flowtime",
+    "hesrpt_total_flowtime",
+    "knee",
+    "make_policy",
+    "omega_star",
+    "optimal_makespan",
+    "simulate",
+    "size_ranks_desc",
+    "speedup",
+    "srpt",
+    "total_flowtime",
+]

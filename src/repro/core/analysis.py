@@ -1,0 +1,54 @@
+"""Diagnostics for allocation trajectories: the paper's structural properties.
+
+Used by property tests and benchmarks to *verify* (not assume) Theorems 3-6
+on simulated trajectories, and by the scheduler to report system efficiency.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flowtime import speedup
+from repro.core.simulator import SimResult
+
+
+def system_efficiency(theta: jax.Array, p: jax.Array) -> jax.Array:
+    """Total service rate of the system relative to its embarrassingly
+    parallel capacity: sum_i s(theta_i N) / s(N) = sum_i theta_i^p."""
+    return jnp.sum(jnp.where(theta > 0, theta ** p, 0.0))
+
+
+def scale_free_constants(result: SimResult) -> jax.Array:
+    """Empirical omega_i per epoch: for the job of rank i (1-indexed, largest
+    first) at the epoch where m(t) = i jobs remain, the paper's scale-free
+    property (Thm 4) says  sum_{j<i} theta_j(t') / theta_i(t')  is the same
+    at every earlier epoch t'.  Returns [E, M]: omega-hat of each job at each
+    epoch (nan where the job is inactive)."""
+    theta = result.theta_trace  # [E, M]
+    sizes = result.sizes_trace  # [E, M]
+    active = sizes > 0
+
+    def per_epoch(th, act):
+        # rank jobs by remaining size descending within this epoch
+        order = jnp.argsort(jnp.where(act, -sizes[0], 0.0))
+        del order  # ranks are static across epochs for heSRPT (SJF order)
+        csum = jnp.cumsum(th) - th  # sum of thetas of *larger* jobs if sorted
+        return jnp.where(act & (th > 0), csum / th, jnp.nan)
+
+    # For heSRPT sizes are already processed in globally fixed SJF order if
+    # x0 was sorted descending; callers pass sorted instances for this check.
+    csum = jnp.cumsum(theta, axis=1) - theta
+    return jnp.where(active & (theta > 0), csum / theta, jnp.nan)
+
+
+def summarize(result: SimResult, p: jax.Array) -> Dict[str, jax.Array]:
+    theta0 = result.theta_trace[0]
+    return {
+        "total_flowtime": result.total_flowtime,
+        "mean_flowtime": result.total_flowtime / result.completion_times.shape[0],
+        "makespan": result.makespan,
+        "initial_efficiency": system_efficiency(theta0, p),
+    }

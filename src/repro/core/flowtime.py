@@ -1,0 +1,110 @@
+"""Closed forms from the paper: Theorem 2 (makespan) and Theorem 8 (flow time).
+
+These are the ground truth the event-driven simulator is validated against
+(tests/test_flowtime.py) and the scheduler uses for instant what-if
+evaluation of job sets without simulating.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def speedup(k: jax.Array, p: jax.Array) -> jax.Array:
+    """s(k) = k^p, the paper's sublinear concave speedup family."""
+    return jnp.where(k > 0, k ** p, 0.0)
+
+
+def omega_star(m: int, p: jax.Array, dtype=jnp.float64) -> jax.Array:
+    """Scale-free constants of the optimal policy (Thm 5/8).
+
+    omega*_1 = 0 and, for 1 < k <= m::
+
+        omega*_k = 1 / ((k/(k-1))^(1/(1-p)) - 1)
+
+    Returned as shape ``[m]`` with index 0 <-> k=1.
+    """
+    k = jnp.arange(1, m + 1, dtype=dtype)
+    c = 1.0 / (1.0 - p)
+    ratio = jnp.where(k > 1, k / jnp.maximum(k - 1.0, 1e-300), jnp.inf)
+    om = jnp.where(k > 1, 1.0 / (ratio ** c - 1.0), 0.0)
+    return om
+
+
+def hesrpt_total_flowtime(
+    x_desc: jax.Array, p: jax.Array, n_servers: jax.Array
+) -> jax.Array:
+    """Theorem 8: optimal total flow time for sizes ``x_desc`` (descending).
+
+    ``T* = (1/s(N)) * sum_k x_k [ k s(1+w_k) - (k-1) s(w_k) ]`` with the
+    ``omega_star`` constants.  ``x_desc[k-1]`` is the k-th *largest* job.
+    """
+    m = x_desc.shape[0]
+    k = jnp.arange(1, m + 1, dtype=x_desc.dtype)
+    om = omega_star(m, p, dtype=x_desc.dtype)
+    coeff = k * speedup(1.0 + om, p) - (k - 1.0) * speedup(om, p)
+    return jnp.sum(x_desc * coeff) / speedup(n_servers, p)
+
+
+def hesrpt_mean_flowtime(
+    x_desc: jax.Array, p: jax.Array, n_servers: jax.Array
+) -> jax.Array:
+    return hesrpt_total_flowtime(x_desc, p, n_servers) / x_desc.shape[0]
+
+
+def optimal_makespan(x: jax.Array, p: jax.Array, n_servers: jax.Array) -> jax.Array:
+    """Theorem 2: T*_max = ||X||_{1/p} in a unit-rate system of size N.
+
+    ``||X||_{1/p} = (sum_i x_i^(1/p))^p``; dividing by ``s(N)`` converts to a
+    system whose single-server rate is 1 and which has ``N`` servers.
+    """
+    active = x > 0
+    xmax = jnp.maximum(jnp.max(jnp.where(active, x, 0.0)), jnp.finfo(x.dtype).tiny)
+    norm = (jnp.sum(jnp.where(active, (x / xmax) ** (1.0 / p), 0.0))) ** p * xmax
+    return norm / speedup(n_servers, p)
+
+
+def hesrpt_completion_times(
+    x_desc: jax.Array, p: jax.Array, n_servers: jax.Array
+) -> jax.Array:
+    """Per-job completion times under heSRPT (jobs indexed largest..smallest).
+
+    Derived epoch-by-epoch: while ``m`` jobs remain (jobs ``1..m``), job ``i``
+    holds ``theta_i(m) = (i/m)^c - ((i-1)/m)^c`` and the *smallest* active job
+    (rank m) departs next.  Between the departure of job ``m+1`` and job
+    ``m``, every active job's remaining size shrinks at rate
+    ``s(theta_i(m) N)``.  This runs the recursion in closed form (it is the
+    fluid trajectory, not a numerical integration).
+    """
+    M = x_desc.shape[0]
+    c = 1.0 / (1.0 - p)
+
+    def theta(i, m):  # i, m float arrays; rank i in 1..m
+        return (i / m) ** c - ((i - 1.0) / m) ** c
+
+    x = x_desc.astype(jnp.result_type(x_desc.dtype, jnp.float32))
+    t = jnp.zeros((), x.dtype)
+    times = jnp.zeros(M, x.dtype)
+
+    def body(carry, m):
+        # m runs M, M-1, ..., 1 (number of active jobs this epoch).
+        x, t, times = carry
+        mf = m.astype(x.dtype)
+        i = jnp.arange(1, M + 1, dtype=x.dtype)
+        active = i <= mf
+        th = jnp.where(active, theta(jnp.minimum(i, mf), mf), 0.0)
+        rate = speedup(th * n_servers, p)
+        # Smallest active job is rank m; it departs next.
+        x_small = x[m - 1]
+        r_small = rate[m - 1]
+        dt = x_small / r_small
+        x = jnp.where(active, jnp.maximum(x - dt * rate, 0.0), x)
+        t = t + dt
+        times = times.at[m - 1].set(t)
+        return (x, t, times), None
+
+    (x, t, times), _ = jax.lax.scan(
+        body, (x, t, times), jnp.arange(M, 0, -1, dtype=jnp.int32)
+    )
+    return times

@@ -1,0 +1,214 @@
+"""Server-allocation policies from the paper (and its competitors).
+
+Every policy maps the *remaining* job sizes ``x`` (shape ``[M]``, entries
+``<= 0`` mean "job already departed") and the speedup exponent ``p`` to an
+allocation vector ``theta`` (shape ``[M]``, ``theta_i in [0, 1]``,
+``sum(theta) <= 1``).  ``theta_i`` is the *fraction* of the ``N``-server
+system granted to job ``i``; the job then progresses at rate
+``s(theta_i * N) = (theta_i * N) ** p``.
+
+All functions are pure, vectorized and ``jax.jit``-able; they are the
+building block used by both the fluid simulator (``core/simulator.py``) and
+the cluster scheduler (``sched/cluster.py``).
+
+Paper: Berg, Vesilo, Harchol-Balter, "heSRPT: Optimal Parallel Scheduling of
+Jobs With Known Sizes", 2019.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Policy = Callable[..., jax.Array]  # (x, p, ...) -> theta
+
+
+def _active(x: jax.Array) -> jax.Array:
+    return x > 0
+
+
+def size_ranks_desc(x: jax.Array) -> jax.Array:
+    """Rank of each *active* job when sorted by remaining size, descending.
+
+    The largest active job gets rank 1, the smallest active job gets rank
+    ``m`` (the number of active jobs).  Inactive jobs get rank 0.  Ties are
+    broken by index (stable argsort), which is WLOG optimal by symmetry.
+    """
+    active = _active(x)
+    # Inactive jobs sort last (key = -inf after negation -> +inf).
+    key = jnp.where(active, -x, jnp.inf)
+    order = jnp.argsort(key)  # indices: active desc by size, then inactive
+    m_total = x.shape[0]
+    ranks = jnp.zeros(m_total, dtype=jnp.int32).at[order].set(
+        jnp.arange(1, m_total + 1, dtype=jnp.int32)
+    )
+    return jnp.where(active, ranks, 0)
+
+
+def hesrpt(x: jax.Array, p: jax.Array) -> jax.Array:
+    """heSRPT (Theorem 7): the optimal allocation for total flow time.
+
+    With ``m`` jobs remaining, ranked ``i = 1..m`` from largest to smallest
+    remaining size::
+
+        theta_i = (i/m)^(1/(1-p)) - ((i-1)/m)^(1/(1-p))
+
+    Allocations are increasing in rank: the *smallest* job gets the largest
+    share, but every active job gets a non-zero share (high efficiency).
+    Size-invariant (Thm 6): depends only on the size *ordering* and ``m``.
+    """
+    active = _active(x)
+    m = jnp.sum(active)
+    ranks = size_ranks_desc(x).astype(x.dtype)
+    c = 1.0 / (1.0 - p)
+    m_safe = jnp.maximum(m, 1).astype(x.dtype)
+    hi = (ranks / m_safe) ** c
+    lo = ((ranks - 1.0) / m_safe) ** c
+    theta = jnp.where(active, hi - lo, 0.0)
+    return theta
+
+
+def helrpt(x: jax.Array, p: jax.Array) -> jax.Array:
+    """heLRPT (Theorem 2): the optimal allocation for makespan.
+
+    ``gamma_i = x_i^(1/p) / sum_j x_j^(1/p)`` over active jobs.  All jobs
+    complete simultaneously at ``||X||_{1/p}`` (Thm 1/2).  The allocation is
+    stable under recomputation from remaining sizes, because remaining sizes
+    stay proportional to the originals (x_i(t) = x_i (1 - t/T*)).
+    """
+    active = _active(x)
+    xs = jnp.where(active, x, 1.0)
+    # Normalize by the max for overflow safety before the 1/p power.
+    xmax = jnp.max(jnp.where(active, x, 0.0))
+    xmax = jnp.maximum(xmax, jnp.finfo(x.dtype).tiny)
+    w = jnp.where(active, (xs / xmax) ** (1.0 / p), 0.0)
+    total = jnp.maximum(jnp.sum(w), jnp.finfo(x.dtype).tiny)
+    return w / total
+
+
+def srpt(x: jax.Array, p: jax.Array | None = None) -> jax.Array:
+    """SRPT: the whole system to the single job with the shortest remaining
+    size.  Optimal iff p == 1 (embarrassingly parallel)."""
+    active = _active(x)
+    key = jnp.where(active, x, jnp.inf)
+    shortest = jnp.argmin(key)
+    theta = jnp.zeros_like(x).at[shortest].set(1.0)
+    return jnp.where(jnp.any(active), theta, jnp.zeros_like(x))
+
+
+def equi(x: jax.Array, p: jax.Array | None = None) -> jax.Array:
+    """EQUI: equal split between active jobs.  Optimal for unknown
+    exponentially-distributed sizes [5]; a lower-efficiency-loss baseline
+    here."""
+    active = _active(x)
+    m = jnp.sum(active)
+    m_safe = jnp.maximum(m, 1).astype(x.dtype)
+    return jnp.where(active, 1.0 / m_safe, 0.0)
+
+
+def hell(x: jax.Array, p: jax.Array, n_servers: jax.Array) -> jax.Array:
+    """HELL [21]: greedy efficiency-to-remaining-time heuristic.
+
+    [21] iteratively picks the job maximizing ``(s(k)/k) / (x_i / s(k)) =
+    s(k)^2 / (k x_i) = k^(2p-1) / x_i`` and grants it the maximizing ``k``.
+
+    With a continuously divisible system this degenerates into two closed
+    forms (documented deviation from the loosely-specified original, see
+    DESIGN.md §9):
+
+    * ``p >= 1/2``: the ratio is non-decreasing in ``k`` -> the first pick
+      takes *all* servers for the smallest job -> SRPT.
+    * ``p < 1/2``: the ratio is decreasing in ``k`` -> greedy water-filling;
+      the fixed point equalizes ``k_i^(2p-1) / x_i`` across jobs, giving
+      ``k_i \\propto x_i^{-1/(1-2p)}`` (strong bias towards short jobs).
+    """
+    del n_servers  # continuous limit; the fixed point is N-independent
+    active = _active(x)
+    p = jnp.asarray(p, dtype=x.dtype)
+
+    def waterfill(_):
+        xs = jnp.where(active, x, 1.0)
+        xmin = jnp.min(jnp.where(active, x, jnp.inf))
+        # Guarded: this branch is only *selected* for p < 1/2, but lax.cond
+        # traces it for any p, so keep the denominator non-zero.
+        expo = -1.0 / jnp.maximum(1.0 - 2.0 * p, 1e-12)
+        w = jnp.where(active, (xs / xmin) ** expo, 0.0)
+        total = jnp.maximum(jnp.sum(w), jnp.finfo(x.dtype).tiny)
+        return w / total
+
+    def srpt_like(_):
+        return srpt(x)
+
+    return jax.lax.cond(p < 0.5, waterfill, srpt_like, operand=None)
+
+
+def knee(
+    x: jax.Array,
+    p: jax.Array,
+    n_servers: jax.Array,
+    alpha: jax.Array,
+) -> jax.Array:
+    """KNEE [21]: allocate each job its "knee" number of servers.
+
+    A job's knee is where the marginal run-time reduction of one more server
+    drops below ``alpha``.  In the continuous relaxation::
+
+        d/dk [x k^-p] = -p x k^-(p+1)   =>   knee_i = (p x_i / alpha)^(1/(1+p))
+
+    Jobs are served in increasing-knee order (== increasing size).  If the
+    knees oversubscribe the system, the prefix of shortest jobs get their
+    knees and the boundary job gets the remainder.  If the knees
+    undersubscribe, [21] repeats the process; the limit of repeated rounds is
+    a proportional-to-knee split of all ``N`` servers (see DESIGN.md §9).
+
+    ``alpha`` has no principled setting; the benchmark brute-forces it and
+    reports the best, mirroring the paper's optimistic treatment of KNEE.
+    """
+    active = _active(x)
+    xs = jnp.where(active, x, 0.0)
+    kn = jnp.where(active, (p * xs / alpha) ** (1.0 / (1.0 + p)), 0.0)
+    total_knee = jnp.sum(kn)
+
+    def undersub(_):
+        tot = jnp.maximum(total_knee, jnp.finfo(x.dtype).tiny)
+        return kn / tot  # proportional split of the full system
+
+    def oversub(_):
+        # Serve in increasing-knee order until N runs out.
+        key = jnp.where(active, kn, jnp.inf)
+        order = jnp.argsort(key)
+        kn_sorted = kn[order]
+        csum = jnp.cumsum(kn_sorted)
+        prev = csum - kn_sorted
+        grant_sorted = jnp.clip(n_servers - prev, 0.0, kn_sorted)
+        grant = jnp.zeros_like(kn).at[order].set(grant_sorted)
+        return jnp.where(active, grant / n_servers, 0.0)
+
+    return jax.lax.cond(total_knee <= n_servers, undersub, oversub, None)
+
+
+# Registry used by the simulator / benchmarks. HELL and KNEE close over the
+# discrete system parameters they need.
+def make_policy(name: str, *, n_servers: float = 1.0, alpha: float = 1.0) -> Policy:
+    name = name.lower()
+    if name == "hesrpt":
+        return hesrpt
+    if name == "helrpt":
+        return helrpt
+    if name == "srpt":
+        return lambda x, p: srpt(x, p)
+    if name == "equi":
+        return lambda x, p: equi(x, p)
+    if name == "hell":
+        return functools.partial(hell, n_servers=jnp.asarray(n_servers))
+    if name == "knee":
+        return functools.partial(
+            knee, n_servers=jnp.asarray(n_servers), alpha=jnp.asarray(alpha)
+        )
+    raise ValueError(f"unknown policy {name!r}")
+
+
+POLICY_NAMES = ("hesrpt", "helrpt", "srpt", "equi", "hell", "knee")

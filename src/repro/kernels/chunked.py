@@ -1,0 +1,319 @@
+"""Chunked XLA implementations of the kernels' algorithms.
+
+These are the production lowering path for the dry-run / non-TPU backends:
+the SAME blocking/online-softmax/chunk-state algorithms as the Pallas
+kernels, expressed in pure jnp + lax.scan so XLA (any backend) lowers them
+with bounded working sets.  Semantics are validated against ``ref.py``
+exactly like the kernels.
+
+Why they exist (measured in EXPERIMENTS.md §Perf):
+- ``attention``: the naive oracle materializes the (Sq x Skv) score matrix —
+  at 32k prefill that is 100+ GB/device.  Blockwise online softmax holds one
+  (block_q x block_k) tile instead.
+- ``ssd``: the oracle scans one timestep at a time (32k trips, state
+  re-read per step -> dry-run memory term explodes); the chunked dual form
+  does 256x fewer, bigger steps on MXU-shaped matmuls.
+- ``rglru``: log-depth associative scan instead of a length-S dependent
+  chain.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import NEG_INF
+
+
+def _attention_fwd_impl(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+    return_stats: bool = False,
+):
+    """Blockwise flash-style attention in pure XLA (fp32 accumulators).
+    With ``return_stats`` also returns the log-sum-exp rows the custom
+    backward needs."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    g = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pq, pk = -Sq % block_q, -Sk % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
+    nq, nk = (Sq + pq) // block_q, (Sk + pk) // block_k
+
+    # [B, Hkv, g, nq, bq, D] view of q; KV stays [B, Hkv, nk, bk, D]
+    q5 = (qp.reshape(B, Hkv, g, nq, block_q, D) * scale).astype(jnp.float32)
+    k5 = kp.reshape(B, Hkv, nk, block_k, D)
+    v5 = vp.reshape(B, Hkv, nk, block_k, D)
+
+    q_pos_base = jnp.arange(block_q) + q_offset
+    k_pos_base = jnp.arange(block_k)
+
+    def q_block(iq):
+        qb = jax.lax.dynamic_index_in_dim(q5, iq, axis=3, keepdims=False)
+        q_pos = q_pos_base + iq * block_q  # [bq]
+
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(k5, jk, axis=2, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(v5, jk, axis=2, keepdims=False)
+            logits = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qb, kb.astype(jnp.float32)
+            )
+            k_pos = k_pos_base + jk * block_k
+            mask = k_pos[None, :] < Sk
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            acc_new = corr[..., None] * acc + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        shape = (B, Hkv, g, block_q)
+        init = (
+            jnp.full(shape, NEG_INF, jnp.float32),
+            jnp.zeros(shape, jnp.float32),
+            jnp.zeros(shape + (D,), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # [B,Hkv,g,bq]
+        return out, lse
+
+    out, lse = jax.lax.map(q_block, jnp.arange(nq))  # [nq, B, Hkv, g, bq, D]
+    out = jnp.moveaxis(out, 0, 3).reshape(B, Hq, Sq + pq, D)[:, :, :Sq]
+    lse = jnp.moveaxis(lse, 0, 3).reshape(B, Hq, Sq + pq)[:, :, :Sq]
+    return (out, lse) if return_stats else out
+
+
+def _mask_block(q_pos, k_pos, Sk, causal, window):
+    mask = k_pos[None, :] < Sk
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    return mask
+
+
+def _attention_bwd_impl(q, k, v, out, lse, do, *, causal, window, q_offset,
+                        scale, block_q, block_k):
+    """Flash-style backward: recompute probabilities blockwise from the saved
+    log-sum-exp; never materializes the (Sq x Skv) score matrix.
+
+        p    = exp(q k^T * scale - lse)
+        dv   = p^T do
+        dp   = do v^T
+        ds   = p * (dp - rowsum(do * out))          [softmax jacobian]
+        dq   = ds k * scale ;  dk = ds^T q * scale
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    g = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pq, pk = -Sq % block_q, -Sk % block_k
+    pad_q = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else t
+    pad_k = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else t
+    qf = pad_q(q).astype(jnp.float32).reshape(B, Hkv, g, -1, block_q, D)
+    dof = pad_q(do).astype(jnp.float32).reshape(B, Hkv, g, -1, block_q, D)
+    outf = pad_q(out).astype(jnp.float32).reshape(B, Hkv, g, -1, block_q, D)
+    lsef = (jnp.pad(lse, ((0, 0), (0, 0), (0, pq)), constant_values=0.0) if pq
+            else lse).reshape(B, Hq, -1, block_q).reshape(B, Hkv, g, -1, block_q)
+    kf = pad_k(k).astype(jnp.float32).reshape(B, Hkv, -1, block_k, D)
+    vf = pad_k(v).astype(jnp.float32).reshape(B, Hkv, -1, block_k, D)
+    nq, nk = qf.shape[3], kf.shape[2]
+
+    delta = jnp.sum(dof * outf, axis=-1)  # [B,Hkv,g,nq,bq]
+    q_pos_all = jnp.arange(Sq + pq).reshape(nq, block_q) + q_offset
+    k_pos_all = jnp.arange(Sk + pk).reshape(nk, block_k)
+
+    def kv_block(jk):
+        kb = kf[:, :, jk]  # [B,Hkv,bk,D]
+        vb = vf[:, :, jk]
+
+        def q_step(carry, iq):
+            dk_acc, dv_acc = carry
+            qb = qf[:, :, :, iq]  # [B,Hkv,g,bq,D]
+            logits = jnp.einsum("bhgqd,bhkd->bhgqk", qb * scale, kb)
+            mask = _mask_block(q_pos_all[iq], k_pos_all[jk], Sk, causal, window)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(logits - lsef[:, :, :, iq][..., None]), 0.0)
+            dob = dof[:, :, :, iq]
+            dv_acc += jnp.einsum("bhgqk,bhgqd->bhkd", p, dob)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dob, vb)
+            ds = p * (dp - delta[:, :, :, iq][..., None])
+            dq_b = jnp.einsum("bhgqk,bhkd->bhgqd", ds, kb) * scale
+            dk_acc += jnp.einsum("bhgqk,bhgqd->bhkd", ds, qb) * scale
+            return (dk_acc, dv_acc), dq_b
+
+        zero = jnp.zeros((B, Hkv, block_k, D), jnp.float32)
+        (dk_b, dv_b), dq_parts = jax.lax.scan(q_step, (zero, zero),
+                                              jnp.arange(nq))
+        return dk_b, dv_b, dq_parts  # dq_parts [nq,B,Hkv,g,bq,D]
+
+    dk_all, dv_all, dq_all = jax.lax.map(kv_block, jnp.arange(nk))
+    dq = jnp.sum(dq_all, axis=0)  # [nq,B,Hkv,g,bq,D]
+    dq = jnp.moveaxis(dq, 0, 3).reshape(B, Hq, Sq + pq, D)[:, :, :Sq]
+    dk = jnp.moveaxis(dk_all, 0, 2).reshape(B, Hkv, Sk + pk, D)[:, :, :Sk]
+    dv = jnp.moveaxis(dv_all, 0, 2).reshape(B, Hkv, Sk + pk, D)[:, :, :Sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def _attention_diff(q, k, v, causal, window, q_offset, scale, block_q, block_k):
+    return _attention_fwd_impl(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_k=block_k,
+    )
+
+
+def _attention_diff_fwd(q, k, v, causal, window, q_offset, scale, block_q,
+                        block_k):
+    out, lse = _attention_fwd_impl(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_k=block_k, return_stats=True,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _attention_diff_bwd(causal, window, q_offset, scale, block_q, block_k,
+                        res, do):
+    q, k, v, out, lse = res
+    return _attention_bwd_impl(
+        q, k, v, out, lse, do, causal=causal, window=window, q_offset=q_offset,
+        scale=scale, block_q=block_q, block_k=block_k,
+    )
+
+
+_attention_diff.defvjp(_attention_diff_fwd, _attention_diff_bwd)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, scale=None,
+              block_q=512, block_k=1024):
+    """Differentiable blockwise attention: flash-style forward AND backward
+    (custom VJP recomputes probabilities from saved log-sum-exp; the full
+    score matrix never exists in either pass)."""
+    D = q.shape[-1]
+    scale = (D ** -0.5) if scale is None else scale
+    return _attention_diff(q, k, v, causal, window, q_offset, scale,
+                           min(block_q, q.shape[2]), min(block_k, k.shape[2]))
+
+
+def ssd(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]
+    a: jax.Array,  # [H]
+    b: jax.Array,  # [B, S, N]
+    c: jax.Array,  # [B, S, N]
+    d: jax.Array,  # [H]
+    *,
+    h0: jax.Array | None = None,
+    block: int = 128,
+    return_state: bool = False,
+):
+    """Chunked SSD dual form (same algorithm as kernels/ssd_scan.py)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    block = min(block, S)
+    pad = -S % block
+    xf = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.float32)
+    dtf = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    bf = jnp.pad(b, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    cf = jnp.pad(c, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    nc = (S + pad) // block
+
+    # chunk views: [nc, B, Q, ...]
+    def chunks(t, feat_shape):
+        return jnp.moveaxis(t.reshape(B, nc, block, *feat_shape), 1, 0)
+
+    xs = chunks(xf, (H, P))
+    dts = chunks(dtf, (H,))
+    bs = chunks(bf, (N,))
+    cs = chunks(cf, (N,))
+    af = a.astype(jnp.float32)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    lower = (
+        jnp.arange(block)[:, None] >= jnp.arange(block)[None, :]
+    )  # [Q, Q]
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq = inp  # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        da = af[None, None, :] * dtq  # [B,Q,H]
+        s = jnp.cumsum(da, axis=1)  # inclusive
+        # intra-chunk dual form
+        cb = jnp.einsum("bqn,bkn->bqk", cq, bq)  # [B,Q,Q]
+        decay = jnp.exp(s[:, :, None, :] - s[:, None, :, :])  # [B,Q,Q,H]
+        scores = jnp.where(lower[None, :, :, None], cb[..., None] * decay, 0.0)
+        scores = scores * dtq[:, None, :, :]  # weight by dt_u
+        y = jnp.einsum("bqkh,bkhp->bqhp", scores, xq)
+        # inter-chunk
+        y += jnp.exp(s)[..., None] * jnp.einsum("bqn,bhpn->bqhp", cq, h)
+        # state update
+        total = s[:, -1, :]  # [B,H]
+        w = jnp.exp(total[:, None, :] - s) * dtq  # [B,Q,H]
+        upd = jnp.einsum("bqhp,bqn->bhpn", xq * w[..., None], bq)
+        h_new = jnp.exp(total)[..., None, None] * h + upd
+        return h_new, y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (xs, dts, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S + pad, H, P)[:, :S]
+    y = y + d.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    y = y.astype(x.dtype)
+    return (y, h_fin) if return_state else y
+
+
+def rglru(
+    x: jax.Array,  # [B, S, W]
+    gate_x: jax.Array,
+    gate_a: jax.Array,
+    a_param: jax.Array,  # [W]
+    *,
+    h0: jax.Array | None = None,
+    return_state: bool = False,
+    c: float = 8.0,
+):
+    """RG-LRU via log-depth associative scan (first-order recurrence)."""
+    xf = x.astype(jnp.float32)
+    rf = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i_f = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32))[None, None, :] * rf
+    a_t = jnp.exp(log_a)
+    g = i_f * xf * jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    if h0 is not None:
+        # fold the initial state into step 0: h_0' = a_0 h_init + g_0
+        g = g.at[:, 0].add(a_t[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, g1 = lhs
+        a2, g2 = rhs
+        return a1 * a2, g1 * a2 + g2
+
+    _, h = jax.lax.associative_scan(combine, (a_t, g), axis=1)
+    out = h.astype(x.dtype)
+    return (out, h[:, -1].astype(jnp.float32)) if return_state else out

@@ -1,0 +1,83 @@
+"""Public jit'd wrappers over the Pallas kernels with kernel | ref dispatch.
+
+``impl`` semantics (every op):
+- ``"auto"``  — Pallas kernel on TPU, jnp reference elsewhere (this CPU
+  container always takes the reference path; the kernels are the TPU target).
+- ``"ref"``   — pure-jnp oracle (``kernels/ref.py``).
+- ``"pallas"`` — the kernel, compiled for the current backend.
+- ``"interpret"`` — the kernel body executed in Python (CPU validation path).
+
+Models call these ops; tests sweep shapes/dtypes asserting pallas(interpret)
+== ref.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import chunked, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+IMPLS = ("auto", "ref", "chunked", "pallas", "interpret")
+
+
+def _resolve(impl: str) -> str:
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "chunked"
+    return impl
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, impl="auto"):
+    """GQA attention; q [B,Hq,Sq,D], k/v [B,Hkv,Skv,D] -> [B,Hq,Sq,D]."""
+    impl = _resolve(impl)
+    if impl == "ref" or q.shape[2] == 1:
+        # Single-query decode is a GEMV — the flash tiling buys nothing.
+        return ref.attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    if impl == "chunked":
+        return chunked.attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+    return flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        interpret=(impl == "interpret"),
+    )
+
+
+def ssd(x, dt, a, b, c, d, *, impl="auto", return_state=False):
+    """Mamba2 SSD; see kernels/ssd_scan.py for layout."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.ssd(x, dt, a, b, c, d, return_state=return_state)
+    if impl == "chunked":
+        return chunked.ssd(x, dt, a, b, c, d, return_state=return_state)
+    return ssd_scan(
+        x, dt, a, b, c, d, interpret=(impl == "interpret"), return_state=return_state
+    )
+
+
+def rglru(x, gate_x, gate_a, a_param, *, impl="auto", return_state=False, c=8.0):
+    """RG-LRU; computes the gate nonlinearities at the JAX level (XLA fuses
+    them) and runs the first-order recurrence as a kernel when on TPU."""
+    import jax.numpy as jnp
+
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.rglru(x, gate_x, gate_a, a_param, return_state=return_state, c=c)
+    if impl == "chunked":
+        return chunked.rglru(
+            x, gate_x, gate_a, a_param, return_state=return_state, c=c
+        )
+    rf = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i_f = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32))[None, None, :] * rf
+    a_t = jnp.exp(log_a)
+    g = i_f * x.astype(jnp.float32) * jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    out = rglru_scan(
+        a_t.astype(x.dtype), g.astype(x.dtype),
+        interpret=(impl == "interpret"), return_state=return_state,
+    )
+    return out

@@ -1,0 +1,155 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: slow, simple, obviously-correct JAX.
+Kernel tests sweep shapes/dtypes and assert_allclose against these; the model
+code calls them through ``ops.py`` (which dispatches kernel vs ref).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def attention_mask(
+    q_len: int, kv_len: int, *, causal: bool, window: int, q_offset: int = 0
+) -> jax.Array:
+    """[q_len, kv_len] boolean mask.  ``q_offset`` is the absolute position of
+    query row 0 (for decode, q_offset = kv_len - q_len).  ``window`` > 0
+    limits attention to the last ``window`` positions (sliding window);
+    position t attends to [t - window + 1, t]."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """GQA scaled-dot-product attention oracle.  fp32 softmax arithmetic,
+    output in q.dtype."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # Broadcast KV heads across the GQA group.
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    mask = attention_mask(Sq, k.shape[2], causal=causal, window=window, q_offset=q_offset)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def ssd(
+    x: jax.Array,  # [B, S, H, P]   inputs per SSM head
+    dt: jax.Array,  # [B, S, H]     softplus'd timestep (positive)
+    a: jax.Array,  # [H]            negative decay rate (A = -exp(a_log))
+    b: jax.Array,  # [B, S, N]      input matrix (ngroups = 1)
+    c: jax.Array,  # [B, S, N]      output matrix
+    d: jax.Array,  # [H]            skip connection
+    *,
+    h0: jax.Array | None = None,  # [B, H, P, N] initial state
+    return_state: bool = False,
+):
+    """Mamba2 SSD (state-space dual) oracle: the exact sequential recurrence
+
+        h_t = exp(a * dt_t) * h_{t-1} + dt_t * (x_t b_t^T)
+        y_t = h_t c_t + d * x_t
+
+    fp32 state arithmetic, output in x.dtype."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(af[None, :] * dtt)  # [B, H]
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        h = decay[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    inputs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+    )
+    h_fin, ys = jax.lax.scan(step, h0.astype(jnp.float32), inputs)
+    y = jnp.moveaxis(ys, 0, 1) + d.astype(jnp.float32)[None, None, :, None] * xf
+    y = y.astype(x.dtype)
+    return (y, h_fin) if return_state else y
+
+
+def rglru(
+    x: jax.Array,  # [B, S, W]   gated input
+    gate_x: jax.Array,  # [B, S, W]  input-gate pre-activation
+    gate_a: jax.Array,  # [B, S, W]  recurrence-gate pre-activation
+    a_param: jax.Array,  # [W]       learnable Λ (pre-softplus)
+    *,
+    h0: jax.Array | None = None,  # [B, W]
+    return_state: bool = False,
+    c: float = 8.0,
+):
+    """RG-LRU oracle (RecurrentGemma):
+
+        r_t = sigmoid(gate_a_t)                    (recurrence gate)
+        i_t = sigmoid(gate_x_t)                    (input gate)
+        log_a_t = -c * softplus(a_param) * r_t
+        a_t = exp(log_a_t)
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+    fp32 state arithmetic, output in x.dtype."""
+    B, S, W = x.shape
+    xf = x.astype(jnp.float32)
+    rf = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i_f = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32))[None, None, :] * rf
+    a_t = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1: 1 - exp(2 log_a).
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gated = i_f * xf * mult
+
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    h_fin, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32), (jnp.moveaxis(a_t, 1, 0), jnp.moveaxis(gated, 1, 0))
+    )
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return (y, h_fin) if return_state else y

@@ -1,0 +1,334 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set XLA_FLAGS before ANY other import (jax locks the device count at
+first init) — hence the first two lines.  Smoke tests and benches never
+import this module; they see the real single CPU device.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCH_IDS,
+    SHAPE_BY_NAME,
+    SHAPES,
+    cell_applicable,
+    get_config,
+)
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import ModelOptions, build_model  # noqa: E402
+from repro.train import TrainConfig, make_train_step  # noqa: E402
+from repro.train.optimizer import init_opt_state  # noqa: E402
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[dims]' or a '(t1, t2, ...)' tuple string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective op kind, parsed from the
+    (post-SPMD-partitioning) HLO.  We count each op's OUTPUT shape — for
+    all-reduce that equals the payload; for all-gather it is the gathered
+    result (ring traffic ~ (n-1)/n of that); a consistent, comparable proxy."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # "%name = SHAPE op-name(...)" — find which collective this line is
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        op = op.rstrip("-start")  # async pairs: count the -start only
+        if op in COLLECTIVE_OPS:
+            out[op] += _shape_bytes(shape_str)
+            counts[op] += 1
+    # avoid double counting: "-done" ops carry the same shape; the regex above
+    # normalizes "-start" but "-done" ops keep their name -> filter them
+    return {"bytes": out, "counts": counts}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, microbatches: int = 8,
+               moe_impl: str = "dense", remat: str = "full",
+               attn_impl: str = "ref", mixer_impl: str = "ref",
+               cast_bf16: bool = False, seq_shard: bool = False,
+               bf16_params: bool = False):
+    """Returns (jitted, example_args) for one grid cell."""
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    from repro.models.common import ParallelConfig
+
+    parallel = ParallelConfig(
+        mesh,
+        data_axes=tuple(a for a in mesh.axis_names if a != "model"),
+        model_axis="model",
+    )
+    opts = ModelOptions(
+        attn_impl=attn_impl, mixer_impl=mixer_impl, moe_impl=moe_impl,
+        remat=remat, activation_dtype="bfloat16", parallel=parallel,
+        seq_shard=seq_shard,
+    )
+    model = build_model(cfg, opts)
+    rng = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(model.init, rng)
+    if bf16_params:
+        # mixed-precision layout: bf16 stored params + fp32 masters in opt
+        params_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if (s.dtype == jnp.float32 and len(s.shape) >= 2)
+            else s,
+            params_sds,
+        )
+    pspecs = sh.param_specs(params_sds, mesh, cfg)
+    batch_sds = model.input_specs(shape)
+
+    if shape.kind == "train":
+        # divisibility: microbatches must divide the global batch
+        while shape.global_batch % microbatches:
+            microbatches -= 1
+        tc = TrainConfig(microbatches=microbatches, cast_params_bf16=cast_bf16)
+        step = make_train_step(model, tc)
+        opt_sds = jax.eval_shape(
+            lambda p: init_opt_state(p, keep_master=bf16_params), params_sds
+        )
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        if bf16_params:
+            ospecs["master"] = pspecs
+        bspecs = sh.batch_specs(batch_sds, mesh)
+        metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh.named(pspecs, mesh), sh.named(ospecs, mesh),
+                          sh.named(bspecs, mesh)),
+            out_shardings=(sh.named(pspecs, mesh), sh.named(ospecs, mesh),
+                           sh.named(metric_specs, mesh)),
+        )
+        return jitted, (params_sds, opt_sds, batch_sds)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill_fn(params, batch)
+
+        bspecs = sh.batch_specs(batch_sds, mesh)
+        logits_spec = sh.spec_for(
+            (shape.global_batch, cfg.vocab_size), ("batch", "vocab"), mesh
+        )
+        cache_sds = jax.eval_shape(
+            lambda p, b: model.prefill_fn(p, b)[1], params_sds, batch_sds
+        )
+        cspecs = sh.cache_specs_tree(cache_sds, mesh)
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(sh.named(pspecs, mesh), sh.named(bspecs, mesh)),
+            out_shardings=(
+                jax.sharding.NamedSharding(mesh, logits_spec),
+                sh.named(cspecs, mesh),
+            ),
+        )
+        return jitted, (params_sds, batch_sds)
+
+    # decode: one token against a seq_len cache
+    def decode_step(params, tokens, caches, cache_length):
+        return model.decode_fn(params, tokens, caches, cache_length)
+
+    cache_sds = model.cache_specs(shape)
+    cspecs = sh.cache_specs_tree(cache_sds, mesh)
+    tok_sds = batch_sds["tokens"]
+    len_sds = batch_sds["cache_length"]
+    tok_spec = sh.spec_for(tok_sds.shape, ("batch", "seq"), mesh)
+    logits_spec = sh.spec_for(
+        (shape.global_batch, 1, cfg.vocab_size), ("batch", "seq", "vocab"), mesh
+    )
+    jitted = jax.jit(
+        decode_step,
+        in_shardings=(
+            sh.named(pspecs, mesh),
+            jax.sharding.NamedSharding(mesh, tok_spec),
+            sh.named(cspecs, mesh),
+            jax.sharding.NamedSharding(mesh, P()),
+        ),
+        out_shardings=(
+            jax.sharding.NamedSharding(mesh, logits_spec),
+            sh.named(cspecs, mesh),
+        ),
+    )
+    return jitted, (params_sds, tok_sds, cache_sds, len_sds)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             microbatches: int = 8, moe_impl: str = "dense",
+             remat: str = "full", attn_impl: str = "ref",
+             mixer_impl: str = "ref", cast_bf16: bool = False,
+             seq_shard: bool = False, bf16_params: bool = False,
+             tag: str = "baseline") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}__{tag}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "microbatches": microbatches, "moe_impl": moe_impl, "remat": remat,
+        "attn_impl": attn_impl, "mixer_impl": mixer_impl,
+        "cast_bf16": cast_bf16, "seq_shard": seq_shard,
+        "bf16_params": bf16_params,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            jitted, args = build_cell(
+                arch, shape_name, mesh, microbatches=microbatches,
+                moe_impl=moe_impl, remat=remat, attn_impl=attn_impl,
+                mixer_impl=mixer_impl, cast_bf16=cast_bf16,
+                seq_shard=seq_shard, bf16_params=bf16_params,
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = {
+            k: v
+            for k, v in dict(compiled.cost_analysis() or {}).items()
+            if k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+        }
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_rec = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        try:
+            deep = analyze_hlo(hlo)
+        except Exception as e:
+            deep = {"error": f"{type(e).__name__}: {e}"}
+        import gzip
+
+        with gzip.open(out_path.replace(".json", ".hlo.txt.gz"), "wt") as f:
+            f.write(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            n_devices=len(mesh.devices.flat),
+            cost={k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float))},
+            memory=mem_rec,
+            collectives=coll,
+            hlo_analysis=deep,
+            hlo_lines=hlo.count("\n"),
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--moe-impl", default="dense")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--attn-impl", default="ref")
+    ap.add_argument("--mixer-impl", default="ref")
+    ap.add_argument("--cast-bf16", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--bf16-params", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                rec = run_cell(
+                    arch, shape_name, multi_pod=multi_pod, out_dir=args.out,
+                    microbatches=args.microbatches, moe_impl=args.moe_impl,
+                    remat=args.remat, attn_impl=args.attn_impl,
+                    mixer_impl=args.mixer_impl, cast_bf16=args.cast_bf16,
+                    seq_shard=args.seq_shard, bf16_params=args.bf16_params,
+                    tag=args.tag,
+                )
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" flops/dev={rec['cost'].get('flops', 0):.3e}"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{status:7s}] {arch} x {shape_name} x "
+                      f"{'multi' if multi_pod else 'single'}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,349 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+Why: ``compiled.cost_analysis()`` counts each ``while`` body ONCE, but our
+stacks are ``lax.scan``s (layers x microbatches) — FLOPs/bytes/collective
+traffic are undercounted by the trip product (e.g. 640x for qwen1.5-110b
+train: 80 layers x 8 microbatches).  This module parses the per-device HLO,
+walks the call graph from ENTRY, and multiplies every while body/cond by its
+trip count (recovered from the loop-condition's comparison constant).
+
+Accounting model (per device):
+- flops:   dot ops: 2 * prod(output dims) * prod(lhs contracting dims);
+           convolution: 2 * prod(output) * prod(kernel non-output dims).
+- bytes:   HBM traffic proxy at the fusion boundary: every top-level op in a
+           computation contributes (operand bytes + output bytes); control
+           ops (tuple/gte/parameter/constant/bitcast) are free.  This mirrors
+           the TPU execution model where each fused kernel streams operands
+           from HBM and writes results back.
+- collectives: per kind, output-shape bytes (x trips inside loops).
+           ``*-start`` counted, ``*-done`` skipped.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[\d,]*\})?")
+# "  %name = SHAPE opcode(operands...), attrs" (shape may be a tuple)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\]{},]+)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+
+
+def _array_shapes(shape_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _ARRAY_RE.finditer(shape_str):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _array_shapes(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+@dataclass
+class Op:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # op name -> shape str
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVE_KINDS:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("->" in line):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.shape_str
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _called_comps(rest: str) -> List[str]:
+    """computation names referenced via calls=/to_apply=/condition=/body=."""
+    out = []
+    for key in ("calls=", "to_apply=", "condition=", "body="):
+        for m in re.finditer(re.escape(key) + r"%?([\w.\-]+)", rest):
+            out.append((key[:-1], m.group(1)))
+    return out
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Names inside the top-level parens of 'opcode(...), attrs'."""
+    depth, end = 1, len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", rest[:end])
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop conditions compare the induction var against a constant bound."""
+    consts: Dict[str, int] = {}
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if m:
+                consts[op.name] = int(m.group(1))
+    for op in cond.ops:
+        if op.opcode == "compare":
+            for name in _operand_names(op.rest):
+                if name in consts:
+                    return max(consts[name], 1)
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = sum(_prod(d) for _, d in _array_shapes(op.shape_str))
+    operands = _operand_names(op.rest)
+    lhs_shape: Tuple[int, ...] = ()
+    if operands and operands[0] in comp.shapes:
+        arrs = _array_shapes(comp.shapes[operands[0]])
+        if arrs:
+            lhs_shape = arrs[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if m and lhs_shape:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_shape):
+                contract *= lhs_shape[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_elems = sum(_prod(d) for _, d in _array_shapes(op.shape_str))
+    operands = _operand_names(op.rest)
+    kernel = 1
+    if len(operands) > 1 and operands[1] in comp.shapes:
+        arrs = _array_shapes(comp.shapes[operands[1]])
+        if arrs:
+            dims = arrs[0][1]
+            kernel = _prod(dims) // max(dims[-1], 1)  # all but out-features
+    m = re.search(r"feature_group_count=(\d+)", op.rest)
+    if m and int(m.group(1)) > 1:
+        kernel = max(kernel // 1, 1)  # depthwise: kernel already per-channel
+    return 2.0 * out_elems * kernel
+
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# Ops that mark an HBM round-trip under TPU-like fusion.  Plain elementwise
+# chains (add/mul/exp/...) fuse into their producers/consumers on TPU, so
+# their traffic is already covered by the neighbouring counted op; XLA:CPU
+# fuses less aggressively, and counting every op would overstate TPU traffic
+# several-fold.
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "copy", "transpose", "reduce", "sort",
+    "reduce-window", "select-and-scatter", "concatenate", "slice", "pad",
+    "reverse", "custom-call", "rng", "rng-bit-generator", "cholesky",
+    "triangular-solve",
+}
+
+
+_SLICE_OPS = ("dynamic-slice", "gather", "slice")
+
+
+def _sliced_param_bytes(sub: Computation) -> Dict[int, int]:
+    """For fusion params consumed ONLY by slicing ops, the bytes actually
+    read: sum of the consumers' output sizes.  {param_index: bytes}."""
+    params: Dict[str, int] = {}
+    for op in sub.ops:
+        if op.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.name + " = parameter(" + op.rest)
+            if m:
+                params[op.name] = int(m.group(1))
+    out: Dict[int, int] = {}
+    for pname, pidx in params.items():
+        consumers = [
+            o for o in sub.ops
+            if o.opcode != "parameter" and pname in _operand_names(o.rest)
+        ]
+        if consumers and all(o.opcode in _SLICE_OPS for o in consumers):
+            out[pidx] = sum(_shape_bytes(o.shape_str) for o in consumers)
+    return out
+
+
+def analyze_computation(
+    comp: Computation, comps: Dict[str, Computation], memo: Dict[str, Totals]
+) -> Totals:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = Totals()  # cycle guard
+    t = Totals()
+    for op in comp.ops:
+        called = dict(_called_comps(op.rest))
+        if op.opcode == "while":
+            body = comps.get(called.get("body", ""))
+            cond = comps.get(called.get("condition", ""))
+            trips = _trip_count(cond) if cond else 1
+            if body:
+                t.add(analyze_computation(body, comps, memo), trips)
+            if cond:
+                t.add(analyze_computation(cond, comps, memo), trips)
+            continue
+        if op.opcode in ("call", "custom-call") and "to_apply" in called:
+            sub = comps.get(called["to_apply"])
+            if sub:
+                t.add(analyze_computation(sub, comps, memo))
+            continue
+        if op.opcode == "conditional":
+            # count the heavier branch (branches appear as called comps)
+            branches = [
+                comps[n] for _, n in _called_comps(op.rest) if n in comps
+            ]
+            if branches:
+                subs = [analyze_computation(b, comps, memo) for b in branches]
+                t.add(max(subs, key=lambda s: s.flops + s.bytes))
+            continue
+
+        base = op.opcode.replace("-start", "")
+        if base in COLLECTIVE_KINDS and not op.opcode.endswith("-done"):
+            t.collective_bytes[base] += _shape_bytes(op.shape_str)
+            t.collective_counts[base] += 1
+            t.bytes += 2 * _shape_bytes(op.shape_str)
+            continue
+        if op.opcode.endswith("-done"):
+            continue
+
+        if op.opcode == "fusion" and "calls" in called:
+            sub = comps.get(called["calls"])
+            if sub:
+                inner = analyze_computation(sub, comps, memo)
+                t.flops += inner.flops  # dots inside the fusion
+            # fusion boundary = HBM traffic: operands + outputs.  Operands
+            # that the fused computation only SLICES (dynamic-slice/gather)
+            # are charged at slice size — a loop body indexing one block of
+            # a stacked tensor reads a block, not the whole stack.
+            t.bytes += _shape_bytes(op.shape_str)
+            operand_names = _operand_names(op.rest)
+            sliced = _sliced_param_bytes(sub) if sub else {}
+            for idx, name in enumerate(operand_names):
+                if idx in sliced:
+                    t.bytes += sliced[idx]
+                else:
+                    t.bytes += _shape_bytes(comp.shapes.get(name, ""))
+            continue
+
+        if op.opcode == "dot":
+            t.flops += _dot_flops(op, comp)
+        elif op.opcode == "convolution":
+            t.flops += _conv_flops(op, comp)
+        if op.opcode in _FREE_OPS or op.opcode not in _MEM_OPS:
+            continue
+        # Index-driven ops touch only the slice, not the whole operand —
+        # charging the full operand would bias the model against scan/loop
+        # implementations (each trip would "re-read" the entire tensor).
+        if op.opcode in ("dynamic-slice", "gather", "slice"):
+            t.bytes += 2 * _shape_bytes(op.shape_str)  # read slice + write
+            continue
+        if op.opcode == "dynamic-update-slice":
+            ops_names = _operand_names(op.rest)
+            upd = comp.shapes.get(ops_names[1], "") if len(ops_names) > 1 else ""
+            t.bytes += 2 * _shape_bytes(upd)  # read update + write window
+            continue
+        t.bytes += _shape_bytes(op.shape_str)
+        for name in _operand_names(op.rest):
+            t.bytes += _shape_bytes(comp.shapes.get(name, ""))
+
+    memo[comp.name] = t
+    return t
+
+
+def analyze_hlo(hlo: str) -> dict:
+    """Per-device totals with while-trip multiplication."""
+    comps = parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[str, Totals] = {}
+    t = analyze_computation(entry, comps, memo)
+    return {
+        "flops": t.flops,
+        "bytes": t.bytes,
+        "collective_bytes": dict(t.collective_bytes),
+        "collective_counts": dict(t.collective_counts),
+    }

@@ -1,0 +1,34 @@
+"""Recompute hlo_analysis for every dry-run record from its saved HLO —
+lets the cost model evolve without recompiling (analysis-from-artifact)."""
+
+import glob
+import gzip
+import json
+import sys
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def main(dirs):
+    n = 0
+    for d in dirs:
+        for path in sorted(glob.glob(f"{d}/*.json")):
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") != "ok":
+                continue
+            hlo_path = path.replace(".json", ".hlo.txt.gz")
+            try:
+                with gzip.open(hlo_path, "rt") as f:
+                    hlo = f.read()
+            except FileNotFoundError:
+                continue
+            rec["hlo_analysis"] = analyze_hlo(hlo)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["results/dryrun", "results/hillclimb"])

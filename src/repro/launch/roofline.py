@@ -1,0 +1,178 @@
+"""Three-term roofline analysis from the dry-run artifacts.
+
+Hardware model (TPU v5e target):
+  peak bf16:  197 TFLOP/s per chip
+  HBM bw:     819 GB/s per chip
+  ICI link:   ~50 GB/s per link
+
+Terms (seconds per step, per chip — the compiled program is the per-device
+SPMD program, so per-device totals divide by per-chip rates):
+  compute    = HLO_FLOPs(dev)       / 197e12
+  memory     = HLO_bytes(dev)       / 819e9
+  collective = collective_bytes(dev) / 50e9
+
+HLO_* come from the trip-count-aware analyzer (launch/hlo_analysis.py);
+``compiled.cost_analysis()``'s raw numbers are also recorded but undercount
+scan bodies (counted once per ``while``).  MODEL_FLOPS uses the paper-
+standard 6·N·D (train) / 2·N·D (inference) with N = active params for MoE.
+roofline_fraction = useful_compute_time / dominant_term — the score a real
+profile would report as "fraction of roofline".
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs per step (global, forward+backward for train)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    tag: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    roofline_fraction: float
+    temp_gb: Optional[float]
+    note: str = ""
+
+
+def analyze_record(rec: dict) -> Optional[CellRoofline]:
+    if rec.get("status") != "ok" or "hlo_analysis" not in rec:
+        return None
+    from repro.configs import SHAPE_BY_NAME, get_config
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPE_BY_NAME[rec["shape"]]
+    chips = rec["n_devices"]
+    h = rec["hlo_analysis"]
+    if "error" in h:
+        return None
+    compute_s = h["flops"] / PEAK_FLOPS
+    memory_s = h["bytes"] / HBM_BW
+    coll_bytes = sum(h["collective_bytes"].values())
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = h["flops"] * chips
+    useful_ratio = mf / hlo_global if hlo_global else 0.0
+    useful_time = mf / (chips * PEAK_FLOPS)
+    frac = useful_time / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    temp = rec.get("memory", {}).get("temp_size_in_bytes")
+    return CellRoofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        tag=rec.get("tag", "baseline"), chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mf, hlo_flops_global=hlo_global,
+        useful_ratio=useful_ratio, roofline_fraction=frac,
+        temp_gb=(temp / 2**30 if temp is not None else None),
+        note=suggest(dominant, rec, useful_ratio),
+    )
+
+
+def suggest(dominant: str, rec: dict, useful_ratio: float) -> str:
+    shape = rec["shape"]
+    if dominant == "collective":
+        return ("cast FSDP weight gathers to bf16 / reduce-scatter grads "
+                "instead of all-reduce")
+    if dominant == "memory":
+        if "decode" in shape or "500k" in shape:
+            return "KV/state cache streaming dominates: shard cache wider or quantize KV to int8"
+        return "weight/activation traffic dominates: bf16 gathers, remat policy 'dots', fuse more"
+    if useful_ratio < 0.5:
+        return "compute-bound but >2x waste vs model FLOPs: cut remat recompute or MoE dense dispatch"
+    return "near compute roofline: overlap remaining collectives with compute"
+
+
+def load_cells(results_dir: str, tag: Optional[str] = None):
+    cells, skips, errors = [], [], []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if tag is not None and rec.get("tag") != tag:
+            continue
+        if rec.get("status") == "skipped":
+            skips.append(rec)
+        elif rec.get("status") == "error":
+            errors.append(rec)
+        else:
+            c = analyze_record(rec)
+            if c:
+                cells.append(c)
+    return cells, skips, errors
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s"
+    return f"{x*1e3:6.1f}ms"
+
+
+def table(cells, *, mesh_filter: Optional[str] = None) -> str:
+    rows = [
+        "| arch | shape | mesh | compute | memory | collective | bottleneck "
+        "| MODEL/HLO | roofline frac | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape, c.mesh)):
+        if mesh_filter and c.mesh != mesh_filter:
+            continue
+        fits = "?" if c.temp_gb is None else ("y" if c.temp_gb < 16 else f"n ({c.temp_gb:.0f}G)")
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {fmt_s(c.compute_s)} "
+            f"| {fmt_s(c.memory_s)} | {fmt_s(c.collective_s)} | {c.dominant} "
+            f"| {c.useful_ratio:.3f} | {c.roofline_fraction:.3f} | {fits} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    cells, skips, errors = load_cells(args.results, args.tag)
+    print(table(cells, mesh_filter=args.mesh))
+    if skips:
+        print("\nSkipped cells:")
+        for s in skips:
+            print(f"- {s['arch']} x {s['shape']} x {s['mesh']}: {s['reason']}")
+    if errors:
+        print("\nERRORED cells:")
+        for e in errors:
+            print(f"- {e['arch']} x {e['shape']} x {e['mesh']}: {e['error'][:100]}")
+    print(f"\n{len(cells)} ok, {len(skips)} skipped, {len(errors)} errors")
+
+
+if __name__ == "__main__":
+    main()

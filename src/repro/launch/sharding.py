@@ -1,0 +1,201 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter / batch / cache leaf gets a tuple of LOGICAL axis names
+matched by path-regex rules; each logical axis maps to an ordered list of
+candidate mesh axes.  Assignment walks the dims in order, taking the first
+candidate whose size divides the dim and which is not already used by an
+earlier dim of the same leaf (a mesh axis may appear at most once per spec);
+dims with no viable candidate stay unsharded.  This single mechanism absorbs
+every divisibility quirk in the assigned grid (40 q-heads vs 16-way model,
+8-expert mixtral vs 16-way data, vocab 51865/151655 not divisible by 16,
+batch-1 long-context decode, ...) without per-arch special cases.
+
+Baseline layout (hillclimbs adjust per EXPERIMENTS.md §Perf):
+  batch       -> ("pod", "data")      activations follow the batch
+  embed dim   -> "data"               FSDP: params+moments sharded over data
+  ff/heads/
+  vocab dims  -> "model"              tensor parallel
+  experts     -> "data" then "model"  EP-style memory sharding for 128-expert
+                                      qwen3; mixtral (8 experts) falls back
+  kv cache    -> batch over data, then head_dim over model (kv_heads rarely
+                 divide 16); ring inserts stay shard-local
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered mesh-axis candidates
+LOGICAL_CANDIDATES = {
+    "layers": (),
+    "batch": (("pod", "data"),),  # joint axes tuple = shard over both
+    "batch_data": (("data",),),
+    "embed": ("data",),
+    "ff": ("model",),
+    "heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("data", "model"),
+    "seq": (),
+    "cache_seq": (),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),
+    "conv": (),
+    "state": ("model",),
+    "lru": ("model",),
+    "none": (),
+}
+
+# (path regex, logical axes per dim).  First match wins; leaves are matched
+# on their '/'-joined tree path.  Missing rule -> fully replicated.
+PARAM_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    # embeddings / output head
+    (r"(^|/)embed$", ("vocab", "embed")),
+    (r"(^|/)lm_head$", ("vocab", "embed")),
+    # attention (stacked under blocks: leading "layers" dim)
+    (r"mix/w[qkv]$", ("layers", "embed", "heads")),
+    (r"mix/wo$", ("layers", "heads", "embed")),
+    (r"mix/b[qkv]$", ("layers", "heads")),
+    (r"(self|cross)_attn/w[qkv]$", ("layers", "embed", "heads")),
+    (r"(self|cross)_attn/wo$", ("layers", "heads", "embed")),
+    (r"(self|cross)_attn/b[qkv]$", ("layers", "heads")),
+    # dense mlp
+    (r"mlp/(gate|up|w1)$", ("layers", "embed", "ff")),
+    (r"mlp/(down|w2)$", ("layers", "ff", "embed")),
+    (r"mlp/b1$", ("layers", "ff")),
+    (r"mlp/b2$", ("layers", "embed")),
+    # moe
+    (r"mlp/router$", ("layers", "embed", "none")),
+    (r"mlp/(gate|up)$", ("layers", "experts", "embed", "ff")),  # (unreachable, doc)
+    (r"mlp/down$", ("layers", "experts", "ff", "embed")),
+    # mamba2
+    (r"mix/in_proj$", ("layers", "embed", "ff")),
+    (r"mix/out_proj$", ("layers", "ff", "embed")),
+    (r"mix/conv_w$", ("layers", "conv", "ff")),
+    (r"mix/conv_b$", ("layers", "ff")),
+    (r"mix/(a_log|d_skip|dt_bias)$", ("layers", "none")),
+    (r"mix/gnorm$", ("layers", "ff")),
+    # rg-lru
+    (r"mix/(w_rec|w_gelu)$", ("layers", "embed", "lru")),
+    (r"mix/w_out$", ("layers", "lru", "embed")),
+    (r"mix/(wgx|bgx|wga|bga|a_param)$", ("layers", "lru")),
+    # norms (stacked or not) stay replicated on the feature dim
+    (r"norm", ("layers", "none")),
+)
+
+# MoE gate/up need 4 dims; the generic mlp rule above matches dense first.
+MOE_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    (r"mlp/(gate|up)$", ("layers", "experts", "embed", "ff")),
+    (r"mlp/down$", ("layers", "experts", "ff", "embed")),
+)
+
+BATCH_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    (r"^(tokens|labels)$", ("batch", "seq")),
+    (r"^patch_embeds$", ("batch", "seq", "embed")),
+    (r"^frames$", ("batch", "seq", "embed")),
+    (r"^cache_length$", ()),
+)
+
+CACHE_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    (r"/(k|v)$", ("layers", "batch", "kv_heads", "cache_seq", "head_dim")),
+    (r"/conv$", ("layers", "batch", "conv", "ff")),
+    (r"/ssm$", ("layers", "batch", "none", "head_dim", "state")),
+    (r"/h$", ("layers", "batch", "lru")),
+)
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _mesh_axes_of(axis) -> tuple:
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[str], mesh) -> P:
+    """Greedy assignment of mesh axes to dims with divisibility + reuse checks."""
+    ndim = len(shape)
+    logical = tuple(logical)[:ndim] + ("none",) * max(0, ndim - len(logical))
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        placed = None
+        for cand in LOGICAL_CANDIDATES.get(name, ()):
+            axes = _mesh_axes_of(cand)
+            if any(a not in mesh.shape for a in axes):
+                # candidate references an axis this mesh lacks (e.g. "pod" on
+                # the single-pod mesh): use the surviving sub-axes.
+                axes = tuple(a for a in axes if a in mesh.shape)
+                if not axes:
+                    continue
+            if used & set(axes):
+                continue
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if size > 1 and dim % size == 0:
+                placed = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+                break
+        out.append(placed)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _match(path: str, rules) -> Optional[Tuple[str, ...]]:
+    for pat, logical in rules:
+        if re.search(pat, path):
+            return logical
+    return None
+
+
+def _tree_specs(tree, mesh, rules, *, moe: bool = False):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        logical = None
+        if moe and getattr(leaf, "ndim", 0) == 4:
+            logical = _match(key, MOE_RULES)
+        if logical is None:
+            logical = _match(key, rules)
+        if logical is None or getattr(leaf, "ndim", 0) == 0:
+            specs.append(P())
+        else:
+            specs.append(spec_for(leaf.shape, logical, mesh))
+    return treedef.unflatten(specs)
+
+
+def param_specs(params, mesh, cfg=None):
+    """PartitionSpec pytree for a parameter tree (arrays or SDS)."""
+    moe = bool(cfg is not None and cfg.n_experts)
+    return _tree_specs(params, mesh, PARAM_RULES, moe=moe)
+
+
+def opt_state_specs(params, mesh, cfg=None):
+    ps = param_specs(params, mesh, cfg)
+    return {"m": ps, "v": jax.tree.map(lambda s: s, ps), "step": P()}
+
+
+def batch_specs(batch, mesh):
+    return _tree_specs(batch, mesh, BATCH_RULES)
+
+
+def cache_specs_tree(caches, mesh):
+    return _tree_specs(caches, mesh, CACHE_RULES)
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,6 @@
+"""Model substrate: the 10 assigned architectures behind one build_model API."""
+
+from repro.models.common import ModelOptions, ParallelConfig
+from repro.models.model import Model, build_model, cross_entropy
+
+__all__ = ["Model", "ModelOptions", "ParallelConfig", "build_model", "cross_entropy"]

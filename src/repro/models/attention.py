@@ -1,0 +1,186 @@
+"""GQA attention block: full-sequence (train/prefill), single-token decode
+against a (possibly ring-buffered) KV cache, and encoder-decoder cross
+attention.
+
+KV caches are dicts ``{"k": [B, Hkv, C, hd], "v": [B, Hkv, C, hd],
+"length": int32}`` where ``C`` is the cache capacity.  For sliding-window
+archs (mixtral SWA, recurrentgemma local attention) ``C = window`` and the
+cache is a *ring buffer* — decode at 500k context touches only ``window``
+slots, which is what makes those archs long-context-servable.  RoPE is
+applied to K at insert time (absolute positions), so ring slots never need
+re-rotation.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import NEG_INF
+from repro.models.layers import rope, split_tree, uniform_scale_init
+
+
+def attn_init(rng, cfg, dtype, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rq, rk, rv, ro = split_tree(rng, 4)
+    p = {
+        "wq": uniform_scale_init(rq, (d, hq * hd), dtype),
+        "wk": uniform_scale_init(rk, (d, hkv * hd), dtype),
+        "wv": uniform_scale_init(rv, (d, hkv * hd), dtype),
+        "wo": uniform_scale_init(ro, (hq * hd, d), dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def cache_capacity(cfg, seq_len: int, window: int) -> int:
+    return min(seq_len, window) if window > 0 else seq_len
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype):
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, capacity, hd), dtype),
+        "v": jnp.zeros((batch, hkv, capacity, hd), dtype),
+    }
+
+
+def _slot_positions(capacity: int, length: jax.Array) -> jax.Array:
+    """Absolute position held by each ring slot after ``length`` inserts.
+    Slots not yet written get -1 (masked)."""
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    wrapped = length - 1 - jnp.mod(length - 1 - j, capacity)
+    pos = jnp.where(length <= capacity, j, wrapped)
+    return jnp.where(j < jnp.minimum(length, capacity), pos, -1)
+
+
+def _project(p, x, name, heads, hd):
+    w = p["w" + name]
+    out = jnp.einsum("bsd,dh->bsh", x, w.astype(x.dtype))
+    if "b" + name in p:
+        out = out + p["b" + name].astype(x.dtype)
+    b, s, _ = out.shape
+    return out.reshape(b, s, heads, hd)
+
+
+def apply_attn(
+    p,
+    x: jax.Array,  # [B, S, D]
+    *,
+    cfg,
+    positions: jax.Array,  # [S] absolute positions of the query tokens
+    window: int = 0,
+    causal: bool = True,
+    use_rope: bool = True,
+    impl: str = "auto",
+    cache: Optional[dict] = None,
+    cache_length=None,  # int32 scalar: tokens already in the cache
+    return_cache: bool = False,
+    cross: bool = False,
+    kv_source: Optional[jax.Array] = None,  # encoder output for cross-attn
+):
+    """Returns ``out [B, S, D]`` (and the new cache when ``return_cache``).
+
+    - full-seq:   cache None, S > 1 (train / prefill)
+    - decode:     cache given, S == 1, ``cache_length`` tokens already stored
+    - cross-attn: ``cross=True``; KV projected from ``kv_source`` (encoder
+      output) once, then reused via the cache (never causal, no rope)
+    """
+    B, S, D = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = _project(p, x, "q", hq, hd)
+    if use_rope and not cross:
+        q = rope(q, positions, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)  # [B, Hq, S, hd]
+
+    if cross:
+        if cache is None:
+            k = _project(p, kv_source, "k", hkv, hd).transpose(0, 2, 1, 3)
+            v = _project(p, kv_source, "v", hkv, hd).transpose(0, 2, 1, 3)
+            cache = {"k": k, "v": v}
+        out = ops.attention(q, cache["k"], cache["v"], causal=False, impl=impl)
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, hq * hd)
+        out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+        return (out, cache) if return_cache else out
+
+    k = _project(p, x, "k", hkv, hd)
+    v = _project(p, x, "v", hkv, hd)
+    if use_rope:
+        k = rope(k, positions, cfg.rope_theta)
+    k = k.transpose(0, 2, 1, 3)  # [B, Hkv, S, hd]
+    v = v.transpose(0, 2, 1, 3)
+
+    if cache is None:
+        out = ops.attention(q, k, v, causal=causal, window=window, impl=impl)
+        new_cache = {"k": k, "v": v}
+    elif S == 1:
+        new_cache = _ring_insert(cache, k, v, cache_length)
+        out = _decode_attend(q, new_cache, cache_length + 1, window=window)
+    else:
+        raise NotImplementedError("chunked append-prefill not needed by the grid")
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    return (out, new_cache) if return_cache else out
+
+
+def prefill_cache(p, x, *, cfg, positions, window: int = 0):
+    """Project K/V for the whole context and fold them into a ring cache of
+    capacity ``min(S, window)`` (or ``S`` when full attention)."""
+    B, S, D = x.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = _project(p, x, "k", hkv, hd)
+    k = rope(k, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    v = _project(p, x, "v", hkv, hd).transpose(0, 2, 1, 3)
+    C = cache_capacity(cfg, S, window)
+    if C < S:
+        # slot j holds absolute position S-1-((S-1-j) mod C)
+        j = jnp.arange(C)
+        pos = S - 1 - jnp.mod(S - 1 - j, C)
+        k = jnp.take(k, pos, axis=2)
+        v = jnp.take(v, pos, axis=2)
+    return {"k": k, "v": v}
+
+
+def _ring_insert(cache: dict, k_new: jax.Array, v_new: jax.Array, t) -> dict:
+    """Insert one timestep at slot ``t mod C``.  k_new/v_new [B, Hkv, 1, hd]."""
+    C = cache["k"].shape[2]
+    idx = jnp.mod(jnp.asarray(t, jnp.int32), C)
+    zero = jnp.zeros((), idx.dtype)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (zero, zero, idx, zero))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (zero, zero, idx, zero))
+    return {"k": k, "v": v}
+
+
+def _decode_attend(q, cache, t, *, window: int):
+    """Single-query attention over a ring cache holding ``t`` tokens.
+    q [B, Hq, 1, hd]."""
+    B, Hq, _, hd = q.shape
+    Hkv = cache["k"].shape[1]
+    group = Hq // Hkv
+    C = cache["k"].shape[2]
+    t = jnp.asarray(t, jnp.int32)
+
+    pos = _slot_positions(C, t)  # [C]
+    valid = pos >= 0
+    q_pos = t - 1
+    valid &= pos <= q_pos
+    if window > 0:
+        valid &= pos > q_pos - window
+
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qf = qf.reshape(B, Hkv, group, hd)
+    logits = jnp.einsum("bhgd,bhcd->bhgc", qf, cache["k"].astype(jnp.float32))
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgc,bhcd->bhgd", probs, cache["v"].astype(jnp.float32))
+    return out.reshape(B, Hq, 1, hd).astype(q.dtype)

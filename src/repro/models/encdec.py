@@ -1,0 +1,204 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (mel filterbank + conv downsampling) is a STUB per the
+grid spec: ``input_specs`` provides precomputed frame embeddings
+[B, encoder_seq, d_model].  Everything downstream is real: sinusoidal
+positions, LayerNorm/GELU transformer encoder, decoder with causal
+self-attention + cross-attention, tied embedding logits.  Both stacks are
+scanned (stacked-layer params) like the decoder-only families.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import apply_attn, attn_init
+from repro.models.common import constrain_batch
+from repro.models.layers import (
+    embed_init,
+    embed_lookup,
+    gelu_mlp,
+    gelu_mlp_init,
+    layer_norm,
+    sinusoidal_positions,
+    split_tree,
+)
+
+
+def _ln_init(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ln(x, p):
+    return layer_norm(x, p["w"], p["b"])
+
+
+def _enc_block_init(rng, cfg, dtype):
+    r1, r2 = split_tree(rng, 2)
+    d = cfg.d_model
+    return {
+        "norm": _ln_init(d, dtype),
+        "attn": attn_init(r1, cfg, dtype),
+        "mlp_norm": _ln_init(d, dtype),
+        "mlp": gelu_mlp_init(r2, d, cfg.d_ff, dtype),
+    }
+
+
+def _dec_block_init(rng, cfg, dtype):
+    r1, r2, r3 = split_tree(rng, 3)
+    d = cfg.d_model
+    return {
+        "norm": _ln_init(d, dtype),
+        "self_attn": attn_init(r1, cfg, dtype),
+        "cross_norm": _ln_init(d, dtype),
+        "cross_attn": attn_init(r2, cfg, dtype, cross=True),
+        "mlp_norm": _ln_init(d, dtype),
+        "mlp": gelu_mlp_init(r3, d, cfg.d_ff, dtype),
+    }
+
+
+def encdec_init(rng, cfg, dtype):
+    r_emb, r_enc, r_dec = split_tree(rng, 3)
+    enc_rngs = jax.random.split(r_enc, cfg.encoder_layers)
+    dec_rngs = jax.random.split(r_dec, cfg.n_layers)
+    return {
+        "embed": embed_init(r_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(lambda r: _enc_block_init(r, cfg, dtype))(enc_rngs),
+        "enc_final": _ln_init(cfg.d_model, dtype),
+        "dec_blocks": jax.vmap(lambda r: _dec_block_init(r, cfg, dtype))(dec_rngs),
+        "dec_final": _ln_init(cfg.d_model, dtype),
+    }
+
+
+def encode(params, frames, *, cfg, opts):
+    """frames [B, Se, D] (stub frontend output) -> encoder states [B, Se, D]."""
+    dtype = frames.dtype
+    x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dtype)
+    zero_pos = jnp.zeros((frames.shape[1],), jnp.int32)
+
+    def block(x, bp):
+        x = constrain_batch(x, opts.parallel)
+        h = _ln(x, bp["norm"])
+        x = x + apply_attn(
+            bp["attn"], h, cfg=cfg, positions=zero_pos, causal=False,
+            use_rope=False, impl=opts.attn_impl,
+        )
+        x = x + gelu_mlp(bp["mlp"], _ln(x, bp["mlp_norm"]))
+        return x, 0
+
+    x, _ = jax.lax.scan(block, x, params["enc_blocks"])
+    return _ln(x, params["enc_final"])
+
+
+def _dec_block(bp, x, *, cfg, opts, mode, positions, enc_out, cache, cache_length,
+               prefill_capacity=None):
+    """One decoder block.  cache = {"self": {k,v}, "cross": {k,v}} or None."""
+    from repro.models.transformer import resize_kv_cache
+
+    new_cache = {}
+    x = constrain_batch(x, opts.parallel)
+    h = _ln(x, bp["norm"])
+    if mode == "train":
+        x = x + apply_attn(
+            bp["self_attn"], h, cfg=cfg, positions=positions, use_rope=False,
+            impl=opts.attn_impl,
+        )
+    elif mode == "prefill":
+        out, sc = apply_attn(
+            bp["self_attn"], h, cfg=cfg, positions=positions, use_rope=False,
+            impl=opts.attn_impl, return_cache=True,
+        )
+        x = x + out
+        new_cache["self"] = resize_kv_cache(
+            sc, h.shape[1], prefill_capacity or h.shape[1], cfg, 0
+        )
+    else:
+        out, sc = apply_attn(
+            bp["self_attn"], h, cfg=cfg, positions=positions, use_rope=False,
+            impl=opts.attn_impl, cache=cache["self"], cache_length=cache_length,
+            return_cache=True,
+        )
+        x = x + out
+        new_cache["self"] = sc
+
+    h = _ln(x, bp["cross_norm"])
+    if mode == "train":
+        x = x + apply_attn(
+            bp["cross_attn"], h, cfg=cfg, positions=positions, cross=True,
+            kv_source=enc_out, impl=opts.attn_impl,
+        )
+    else:
+        out, cc = apply_attn(
+            bp["cross_attn"], h, cfg=cfg, positions=positions, cross=True,
+            kv_source=enc_out,
+            cache=None if cache is None else cache["cross"],
+            impl=opts.attn_impl, return_cache=True,
+        )
+        x = x + out
+        new_cache["cross"] = cc
+
+    x = x + gelu_mlp(bp["mlp"], _ln(x, bp["mlp_norm"]))
+    return x, (new_cache if mode != "train" else None)
+
+
+def decode_stack(params, tokens, *, cfg, opts, mode, enc_out=None, caches=None,
+                 cache_length=None, prefill_capacity=None):
+    """tokens [B, S] -> (hidden [B,S,D], new_caches).  ``enc_out`` required
+    for train/prefill; decode reuses the cached cross KV."""
+    dtype = enc_out.dtype if enc_out is not None else params["embed"].dtype
+    if mode == "decode":
+        dtype = caches["blocks"]["self"]["k"].dtype
+    x = embed_lookup(params["embed"], tokens, dtype)
+    S = tokens.shape[1]
+    if mode == "decode":
+        positions = jnp.asarray(cache_length)[None]
+        x = x + _sinusoidal_at(jnp.asarray(cache_length), cfg.d_model).astype(dtype)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(dtype)
+
+    def body(carry, xs):
+        x, = carry
+        if mode == "decode":
+            bp, bc = xs
+        else:
+            bp, bc = xs, None
+        x, nc = _dec_block(
+            bp, x, cfg=cfg, opts=opts, mode=mode, positions=positions,
+            enc_out=enc_out, cache=bc, cache_length=cache_length,
+            prefill_capacity=prefill_capacity,
+        )
+        return (x,), (nc if mode != "train" else 0)
+
+    xs = (params["dec_blocks"], caches["blocks"]) if mode == "decode" else params["dec_blocks"]
+    if mode == "train" and opts.remat == "full":
+        inner = body
+
+        def body(carry, xs):  # noqa: F811 — rematted wrapper
+            return jax.checkpoint(inner)(carry, xs)
+
+    (x,), new_caches = jax.lax.scan(body, (x,), xs)
+    x = _ln(x, params["dec_final"])
+    return x, ({"blocks": new_caches} if mode != "train" else None)
+
+
+def _sinusoidal_at(pos, d: int) -> jax.Array:
+    """Sinusoidal embedding for one (traced) position.  -> [d]."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def encdec_cache_specs(cfg, batch: int, seq_len: int, dtype):
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_layers
+
+    def kv(capacity):
+        return {
+            "k": jax.ShapeDtypeStruct((L, batch, hkv, capacity, hd), dtype),
+            "v": jax.ShapeDtypeStruct((L, batch, hkv, capacity, hd), dtype),
+        }
+
+    return {"blocks": {"self": kv(seq_len), "cross": kv(cfg.encoder_seq)}}

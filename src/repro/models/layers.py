@@ -1,0 +1,115 @@
+"""Shared neural-net primitives: norms, RoPE, MLPs, init helpers.
+
+Everything is a pure function over explicit parameter dicts — no module
+framework.  Parameter trees use stacked-layer leading dims so the decoder
+stacks scan over layers (small HLO, fast compiles, remat-friendly).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- init utils
+def uniform_scale_init(rng, shape, dtype=jnp.float32, scale=None):
+    """LeCun-ish uniform init: +-sqrt(3 / fan_in) (fan_in = shape[-2] or [0])."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = (3.0 / max(fan_in, 1)) ** 0.5 if scale is None else scale
+    return jax.random.uniform(rng, shape, dtype, -1.0, 1.0) * scale
+
+
+def split_tree(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + 0.0 * eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(
+        jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x [..., S, H, D] (D even), positions [..., S]."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)  # [D/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings [n, d]."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------- MLPs
+def swiglu_init(rng, d: int, f: int, dtype):
+    r1, r2, r3 = split_tree(rng, 3)
+    return {
+        "gate": uniform_scale_init(r1, (d, f), dtype),
+        "up": uniform_scale_init(r2, (d, f), dtype),
+        "down": uniform_scale_init(r3, (f, d), dtype),
+    }
+
+
+def swiglu(p, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, p["gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["down"].astype(x.dtype))
+
+
+def gelu_mlp_init(rng, d: int, f: int, dtype):
+    r1, r2 = split_tree(rng, 2)
+    return {
+        "w1": uniform_scale_init(r1, (d, f), dtype),
+        "b1": jnp.zeros((f,), dtype),
+        "w2": uniform_scale_init(r2, (f, d), dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w1"].astype(x.dtype)) + p["b1"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w2"].astype(x.dtype)) + p["b2"].astype(
+        x.dtype
+    )
+
+
+# ----------------------------------------------------------- embedding/logits
+def embed_init(rng, vocab: int, d: int, dtype):
+    return uniform_scale_init(rng, (vocab, d), dtype, scale=0.02)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    # Gather (0 FLOPs).  With a vocab-sharded table GSPMD lowers this to a
+    # local gather + mask + all-reduce over the vocab axis — cheaper than the
+    # one-hot-matmul alternative, whose (tokens x vocab) one-hot costs the
+    # same FLOPs as the output projection.
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def logits_from_embed(table: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))

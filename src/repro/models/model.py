@@ -1,0 +1,221 @@
+"""``build_model(cfg, opts)`` — the single public entry point for every
+assigned architecture.  Returns a ``Model`` of pure functions:
+
+  init(rng)                                   -> params (fp32 masters)
+  loss_fn(params, batch)                      -> (loss, metrics)
+  prefill_fn(params, batch)                   -> (last_logits [B,V], caches)
+  decode_fn(params, tokens, caches, t)        -> (logits [B,1,V], caches)
+  input_specs(shape)                          -> {name: ShapeDtypeStruct}
+  cache_specs(shape)                          -> cache pytree of SDS
+
+``input_specs``/``cache_specs`` are the dry-run contract: weak-type-correct
+stand-ins for every model input, no device allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec
+from repro.models.common import ModelOptions, constrain_batch
+from repro.models.layers import (
+    embed_init,
+    embed_lookup,
+    logits_from_embed,
+    rms_norm,
+    split_tree,
+    uniform_scale_init,
+)
+from repro.models.transformer import stack_apply, stack_cache_specs, stack_init
+from repro.models.vlm import patch_embed_spec, splice_patches, vlm_loss_mask
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    opts: ModelOptions
+    init: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    input_specs: Callable
+    cache_specs: Callable
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array):
+    """Mean masked CE.  logits [B,S,V] (any dtype; reduced in fp32)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce) / denom
+
+
+def _lm_head(cfg, params, x):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return logits_from_embed(table, x)
+
+
+def build_model(cfg: ModelConfig, opts: ModelOptions = ModelOptions()) -> Model:
+    if cfg.family == "audio":
+        return _build_encdec(cfg, opts)
+    return _build_decoder_only(cfg, opts)
+
+
+# --------------------------------------------------------- decoder-only LMs
+def _build_decoder_only(cfg: ModelConfig, opts: ModelOptions) -> Model:
+    adt = jnp.dtype(opts.activation_dtype)
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    def init(rng):
+        r_emb, r_stack, r_head = split_tree(rng, 3)
+        params = {
+            "embed": embed_init(r_emb, cfg.vocab_size, cfg.d_model, pdt),
+            "stack": stack_init(r_stack, cfg, pdt),
+            "final_norm": jnp.ones((cfg.d_model,), pdt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = uniform_scale_init(
+                r_head, (cfg.vocab_size, cfg.d_model), pdt, scale=0.02
+            )
+        return params
+
+    def forward(params, tokens, *, mode, caches=None, cache_length=None,
+                patch_embeds=None, max_len=None):
+        x = embed_lookup(params["embed"], tokens, adt)
+        if patch_embeds is not None:
+            x = splice_patches(x, patch_embeds)
+        x = constrain_batch(x, opts.parallel)
+        if mode == "decode":
+            positions = jnp.asarray(cache_length, jnp.int32)[None]
+        else:
+            positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x, new_caches, aux = stack_apply(
+            params["stack"], x, cfg=cfg, opts=opts, mode=mode,
+            positions=positions, caches=caches, cache_length=cache_length,
+            prefill_capacity=max_len,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_caches, aux
+
+    def loss_fn(params, batch):
+        x, _, aux = forward(
+            params, batch["tokens"], mode="train",
+            patch_embeds=batch.get("patch_embeds"),
+        )
+        logits = _lm_head(cfg, params, x)
+        mask = (
+            vlm_loss_mask(cfg, batch["tokens"])
+            if cfg.family == "vlm"
+            else jnp.ones(batch["tokens"].shape, jnp.float32)
+        )
+        ce = cross_entropy(logits, batch["labels"], mask)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux_loss": aux}
+
+    def prefill_fn(params, batch, max_len=None):
+        x, caches, _ = forward(
+            params, batch["tokens"], mode="prefill",
+            patch_embeds=batch.get("patch_embeds"), max_len=max_len,
+        )
+        logits = _lm_head(cfg, params, x[:, -1:, :])[:, 0, :]
+        return logits, caches
+
+    def decode_fn(params, tokens, caches, cache_length):
+        x, caches, _ = forward(
+            params, tokens, mode="decode", caches=caches, cache_length=cache_length
+        )
+        return _lm_head(cfg, params, x), caches
+
+    def input_specs(shape: ShapeConfig):
+        b = shape.global_batch
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), i32),
+                "labels": jax.ShapeDtypeStruct((b, shape.seq_len), i32),
+            }
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = patch_embed_spec(cfg, b, adt)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), i32)}
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = patch_embed_spec(cfg, b, adt)
+            return specs
+        # decode: one new token against a cache of shape.seq_len
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache_length": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def cache_specs(shape: ShapeConfig):
+        return stack_cache_specs(cfg, shape.global_batch, shape.seq_len, adt)
+
+    return Model(cfg, opts, init, loss_fn, prefill_fn, decode_fn, input_specs,
+                 cache_specs)
+
+
+# ------------------------------------------------------------ encoder-decoder
+def _build_encdec(cfg: ModelConfig, opts: ModelOptions) -> Model:
+    adt = jnp.dtype(opts.activation_dtype)
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    def init(rng):
+        return encdec.encdec_init(rng, cfg, pdt)
+
+    def loss_fn(params, batch):
+        enc_out = encdec.encode(params, batch["frames"].astype(adt), cfg=cfg, opts=opts)
+        x, _ = encdec.decode_stack(
+            params, batch["tokens"], cfg=cfg, opts=opts, mode="train", enc_out=enc_out
+        )
+        logits = logits_from_embed(params["embed"], x)
+        mask = jnp.ones(batch["tokens"].shape, jnp.float32)
+        ce = cross_entropy(logits, batch["labels"], mask)
+        return ce, {"ce": ce, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill_fn(params, batch, max_len=None):
+        enc_out = encdec.encode(params, batch["frames"].astype(adt), cfg=cfg, opts=opts)
+        x, caches = encdec.decode_stack(
+            params, batch["tokens"], cfg=cfg, opts=opts, mode="prefill",
+            enc_out=enc_out, prefill_capacity=max_len,
+        )
+        logits = logits_from_embed(params["embed"], x[:, -1:, :])[:, 0, :]
+        return logits, caches
+
+    def decode_fn(params, tokens, caches, cache_length):
+        x, caches = encdec.decode_stack(
+            params, tokens, cfg=cfg, opts=opts, mode="decode", caches=caches,
+            cache_length=cache_length,
+        )
+        return logits_from_embed(params["embed"], x), caches
+
+    def input_specs(shape: ShapeConfig):
+        b = shape.global_batch
+        i32 = jnp.int32
+        frames = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), adt)
+        if shape.kind == "train":
+            return {
+                "frames": frames,
+                "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), i32),
+                "labels": jax.ShapeDtypeStruct((b, shape.seq_len), i32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": frames,
+                "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache_length": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def cache_specs(shape: ShapeConfig):
+        return encdec.encdec_cache_specs(cfg, shape.global_batch, shape.seq_len, adt)
+
+    return Model(cfg, opts, init, loss_fn, prefill_fn, decode_fn, input_specs,
+                 cache_specs)

@@ -1,0 +1,92 @@
+"""RecurrentGemma recurrent block: parallel GeLU branch x (conv + RG-LRU)
+branch, merged and projected back to d_model.  Gates are per-channel
+(diagonal) — the simplest member of Griffin's block-diagonal gate family.
+Decode carries a constant (conv window, recurrent h) cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models.layers import split_tree, uniform_scale_init
+from repro.models.ssm import _causal_conv
+
+RG_CONV = 4
+
+
+def rg_init(rng, cfg, dtype):
+    d, lw = cfg.d_model, cfg.lru_width or cfg.d_model
+    r1, r2, r3, r4, r5 = split_tree(rng, 5)
+    return {
+        "w_rec": uniform_scale_init(r1, (d, lw), dtype),
+        "w_gelu": uniform_scale_init(r2, (d, lw), dtype),
+        "w_out": uniform_scale_init(r3, (lw, d), dtype),
+        "conv_w": uniform_scale_init(r4, (RG_CONV, lw), dtype),
+        "conv_b": jnp.zeros((lw,), dtype),
+        "wgx": jnp.ones((lw,), dtype),
+        "bgx": jnp.zeros((lw,), dtype),
+        "wga": jnp.ones((lw,), dtype),
+        "bga": jnp.zeros((lw,), dtype),
+        # softplus(a_param) ~ U[...] so decay a^c spans (0.9, 0.999)-ish
+        "a_param": jnp.asarray(
+            jax.random.uniform(r5, (lw,), jnp.float32, -2.0, 1.0), dtype
+        ),
+    }
+
+
+def _gates(p, rec, dtype):
+    gate_x = rec * p["wgx"].astype(dtype) + p["bgx"].astype(dtype)
+    gate_a = rec * p["wga"].astype(dtype) + p["bga"].astype(dtype)
+    return gate_x, gate_a
+
+
+def rg_apply(p, x, *, cfg, impl="auto", cache=None, return_cache=False):
+    """x [B,S,D].  Cache: {"conv": [B, K-1, lw], "h": [B, lw] fp32,
+    "length": i32}."""
+    B, S, D = x.shape
+    lw = cfg.lru_width or cfg.d_model
+    rec_in = jnp.einsum("bsd,dw->bsw", x, p["w_rec"].astype(x.dtype))
+    gel = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gelu"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+
+    if cache is None:
+        conv_tail = rec_in[:, -(RG_CONV - 1) :, :] if return_cache else None
+        rec = _causal_conv(rec_in, p["conv_w"], p["conv_b"])
+        gate_x, gate_a = _gates(p, rec, x.dtype)
+        if return_cache:
+            h, h_last = ops.rglru(
+                rec, gate_x, gate_a, p["a_param"], impl=impl, return_state=True
+            )
+        else:
+            h = ops.rglru(rec, gate_x, gate_a, p["a_param"], impl=impl)
+        out = jnp.einsum("bsw,wd->bsd", h * gel, p["w_out"].astype(x.dtype))
+        if return_cache:
+            pad = RG_CONV - 1 - conv_tail.shape[1]
+            if pad > 0:
+                conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+            cache = {"conv": conv_tail, "h": h_last.astype(jnp.float32)}
+            return out, cache
+        return out
+
+    # ---- decode: S == 1 ----
+    conv_win = jnp.concatenate([cache["conv"], rec_in], axis=1)  # [B, K, lw]
+    rec = jnp.einsum("bkc,kc->bc", conv_win, p["conv_w"].astype(x.dtype))
+    rec = (rec + p["conv_b"].astype(x.dtype))[:, None, :]  # [B,1,lw]
+    gate_x, gate_a = _gates(p, rec, x.dtype)
+    h, h_last = ref.rglru(
+        rec, gate_x, gate_a, p["a_param"], h0=cache["h"], return_state=True
+    )
+    out = jnp.einsum("bsw,wd->bsd", h * gel, p["w_out"].astype(x.dtype))
+    new_cache = {"conv": conv_win[:, 1:, :], "h": h_last}
+    return (out, new_cache) if return_cache else out
+
+
+def rg_cache_shape(cfg, batch: int, dtype):
+    lw = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, RG_CONV - 1, lw), dtype),
+        "h": jax.ShapeDtypeStruct((batch, lw), jnp.float32),
+    }

@@ -1,0 +1,125 @@
+"""Mamba2 block (SSD mixer): projections + causal depthwise conv + SSD scan
++ gated RMSNorm + out projection.  Attention-free; decode carries a constant
+(conv window, SSM state) cache — this is what makes the family
+500k-context-servable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models.layers import rms_norm, split_tree, uniform_scale_init
+
+
+def ssm_init(rng, cfg, dtype):
+    d, di, n, h, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_conv
+    conv_ch = di + 2 * n
+    r1, r2, r3, r4 = split_tree(rng, 4)
+    return {
+        # in_proj emits [z (di), xBC (di + 2N), dt (H)]
+        "in_proj": uniform_scale_init(r1, (d, 2 * di + 2 * n + h), dtype),
+        "conv_w": uniform_scale_init(r2, (cfg.ssm_conv, conv_ch), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "dt_bias": jnp.asarray(
+            jax.random.uniform(r3, (h,), jnp.float32, -4.6, -2.2), dtype
+        ),  # softplus^-1 of dt in ~[0.01, 0.1]
+        "gnorm": jnp.ones((di,), dtype),
+        "out_proj": uniform_scale_init(r4, (di, d), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x [B,S,C], w [K,C]."""
+    k, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        x,
+        w.astype(x.dtype)[:, None, :],  # [K, 1, C]
+        window_strides=(1,),
+        padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(p, x, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _finish(p, y_flat, z, x_dtype, cfg):
+    y = rms_norm(
+        y_flat * jax.nn.silu(z.astype(jnp.float32)).astype(x_dtype),
+        p["gnorm"],
+        cfg.norm_eps,
+    )
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x_dtype))
+
+
+def ssm_apply(p, x, *, cfg, impl="auto", cache=None, return_cache=False):
+    """x [B,S,D].  Full-seq when cache is None; single-step decode otherwise.
+    Cache: {"conv": [B, K-1, di+2N], "ssm": [B,H,P,N] fp32, "length": i32}."""
+    B, S, D = x.shape
+    di, n, h, pp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(p, x, cfg)
+
+    if cache is None:
+        conv_tail = xbc[:, -(cfg.ssm_conv - 1) :, :] if return_cache else None
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+        x_ssm = xbc[..., :di].reshape(B, S, h, pp)
+        b_mat = xbc[..., di : di + n]
+        c_mat = xbc[..., di + n :]
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        if return_cache:
+            y, state = ops.ssd(
+                x_ssm, dt, a, b_mat, c_mat, p["d_skip"].astype(jnp.float32),
+                impl=impl, return_state=True,
+            )
+        else:
+            y = ops.ssd(
+                x_ssm, dt, a, b_mat, c_mat, p["d_skip"].astype(jnp.float32), impl=impl
+            )
+        out = _finish(p, y.reshape(B, S, di), z, x.dtype, cfg)
+        if return_cache:
+            pad = cfg.ssm_conv - 1 - conv_tail.shape[1]
+            if pad > 0:
+                conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+            cache = {"conv": conv_tail, "ssm": state}
+            return out, cache
+        return out
+
+    # ---- decode: S == 1, sequential-step via the oracle recurrence ----
+    conv_win = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, K, C]
+    xbc_t = jnp.einsum("bkc,kc->bc", conv_win, p["conv_w"].astype(x.dtype))
+    xbc_t = jax.nn.silu((xbc_t + p["conv_b"].astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+    xbc_t = xbc_t[:, None, :]  # [B,1,C]
+    x_ssm = xbc_t[..., :di].reshape(B, 1, h, pp)
+    b_mat = xbc_t[..., di : di + n]
+    c_mat = xbc_t[..., di + n :]
+    dt_t = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, state = ref.ssd(
+        x_ssm, dt_t, a, b_mat, c_mat, p["d_skip"].astype(jnp.float32),
+        h0=cache["ssm"], return_state=True,
+    )
+    out = _finish(p, y.reshape(B, 1, di), z, x.dtype, cfg)
+    new_cache = {"conv": conv_win[:, 1:, :], "ssm": state}
+    return (out, new_cache) if return_cache else out
+
+
+def ssm_cache_shape(cfg, batch: int, dtype):
+    """ShapeDtypeStructs for one layer's decode cache."""
+    di, n, h, pp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, h, pp, n), jnp.float32),
+    }

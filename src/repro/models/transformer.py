@@ -1,0 +1,293 @@
+"""The decoder stack: scan-over-blocks with remat, shared by the dense, moe,
+ssm, hybrid and vlm families.
+
+A *block* is one repetition of the architecture's mixer pattern:
+  dense/moe/vlm -> ("attn",)         ssm -> ("ssm",)
+  hybrid        -> cfg.layer_pattern (e.g. ("rglru", "rglru", "attn"))
+Block parameters are stacked on a leading ``n_blocks`` axis and the stack is
+a single ``lax.scan`` — the compiled HLO contains ONE block body regardless
+of depth (fast compiles, small programs, remat applies per block).  Layer
+counts not divisible by the pattern get explicit unscanned tail layers.
+
+Decode caches mirror the block structure ({"sub0": {...}, ...}, stacked on
+the same leading axis) and flow through the scan as per-iteration inputs /
+stacked outputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import apply_attn, cache_capacity
+from repro.models.common import ModelOptions, constrain_batch, constrain_seq
+from repro.models.layers import rms_norm, split_tree, swiglu, swiglu_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rglru import RG_CONV, rg_apply, rg_cache_shape, rg_init
+from repro.models.ssm import ssm_apply, ssm_cache_shape, ssm_init
+from repro.models.attention import attn_init
+
+
+def pattern_of(cfg) -> tuple:
+    if cfg.family == "ssm":
+        return ("ssm",)
+    if cfg.family == "hybrid":
+        return tuple(cfg.layer_pattern)
+    return ("attn",)
+
+
+def block_counts(cfg) -> tuple:
+    """(n_scanned_blocks, tail_kinds) — tail layers repeat the pattern prefix."""
+    pat = pattern_of(cfg)
+    n_blocks = cfg.n_layers // len(pat)
+    tail = cfg.n_layers - n_blocks * len(pat)
+    return n_blocks, pat[:tail]
+
+
+def _has_mlp(cfg) -> bool:
+    return cfg.d_ff > 0
+
+
+def _sublayer_init(rng, cfg, kind, dtype):
+    d = cfg.d_model
+    r_mix, r_mlp = split_tree(rng, 2)
+    p = {"norm": jnp.ones((d,), dtype)}
+    if kind == "attn":
+        p["mix"] = attn_init(r_mix, cfg, dtype)
+    elif kind == "ssm":
+        p["mix"] = ssm_init(r_mix, cfg, dtype)
+    elif kind == "rglru":
+        p["mix"] = rg_init(r_mix, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(cfg):
+        p["mlp_norm"] = jnp.ones((d,), dtype)
+        p["mlp"] = (
+            moe_init(r_mlp, cfg, dtype)
+            if cfg.n_experts
+            else swiglu_init(r_mlp, cfg.d_model, cfg.d_ff, dtype)
+        )
+    return p
+
+
+def _block_init(rng, cfg, kinds, dtype):
+    rngs = split_tree(rng, len(kinds))
+    return {f"sub{i}": _sublayer_init(rngs[i], cfg, k, dtype) for i, k in enumerate(kinds)}
+
+
+def stack_init(rng, cfg, dtype):
+    n_blocks, tail = block_counts(cfg)
+    pat = pattern_of(cfg)
+    r_blocks, r_tail = jax.random.split(rng)
+    rngs = jax.random.split(r_blocks, n_blocks)
+    blocks = jax.vmap(lambda r: _block_init(r, cfg, pat, dtype))(rngs)
+    params = {"blocks": blocks}
+    if tail:
+        params["tail"] = _block_init(r_tail, cfg, tail, dtype)
+    return params
+
+
+def _apply_sublayer(sp, x, kind, *, cfg, opts, mode, positions, cache,
+                    cache_length, prefill_capacity=None):
+    """One (mixer + optional MLP) sublayer.  Returns (x, new_cache, aux)."""
+    h = rms_norm(x, sp["norm"], cfg.norm_eps)
+    new_cache = None
+    if kind == "attn":
+        window = cfg.window
+        if mode == "train":
+            out = apply_attn(
+                sp["mix"], h, cfg=cfg, positions=positions, window=window,
+                impl=opts.attn_impl,
+            )
+        elif mode == "prefill":
+            out, new_cache = apply_attn(
+                sp["mix"], h, cfg=cfg, positions=positions, window=window,
+                impl=opts.attn_impl, return_cache=True,
+            )
+            new_cache = resize_kv_cache(
+                new_cache, h.shape[1], prefill_capacity or h.shape[1], cfg, window
+            )
+        else:  # decode
+            out, new_cache = apply_attn(
+                sp["mix"], h, cfg=cfg, positions=positions, window=window,
+                impl=opts.attn_impl, cache=cache, cache_length=cache_length,
+                return_cache=True,
+            )
+    elif kind == "ssm":
+        if mode == "train":
+            out = ssm_apply(sp["mix"], h, cfg=cfg, impl=opts.mixer_impl)
+        else:
+            out, new_cache = ssm_apply(
+                sp["mix"], h, cfg=cfg, impl=opts.mixer_impl, cache=cache,
+                return_cache=True,
+            )
+    elif kind == "rglru":
+        if mode == "train":
+            out = rg_apply(sp["mix"], h, cfg=cfg, impl=opts.mixer_impl)
+        else:
+            out, new_cache = rg_apply(
+                sp["mix"], h, cfg=cfg, impl=opts.mixer_impl, cache=cache,
+                return_cache=True,
+            )
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    aux = jnp.zeros((), jnp.float32)
+    if _has_mlp(cfg):
+        h2 = rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+        if cfg.n_experts:
+            out2, aux = moe_apply(
+                sp["mlp"], h2, cfg, impl=opts.moe_impl, parallel=opts.parallel
+            )
+        else:
+            out2 = swiglu(sp["mlp"], h2)
+        x = x + out2
+    return x, new_cache, aux
+
+
+def resize_kv_cache(cache, used: int, target_len: int, cfg, window: int):
+    """Fit a freshly-prefilled KV cache (``used`` positions) to the capacity a
+    ``target_len``-token conversation needs: ring-fold when the window is
+    smaller, zero-pad headroom when larger."""
+    C = cache_capacity(cfg, max(target_len, used), window)
+    S = cache["k"].shape[2]
+    if C < S:  # ring fold: slot j holds absolute position used-1-((used-1-j)%C)
+        j = jnp.arange(C)
+        pos = used - 1 - jnp.mod(used - 1 - j, C)
+        return {
+            "k": jnp.take(cache["k"], pos, axis=2),
+            "v": jnp.take(cache["v"], pos, axis=2),
+        }
+    if C > S:  # headroom for future ring inserts at slot (t mod C)
+        pad = ((0, 0), (0, 0), (0, C - S), (0, 0))
+        return {"k": jnp.pad(cache["k"], pad), "v": jnp.pad(cache["v"], pad)}
+    return cache
+
+
+def _block_apply(bp, x, kinds, *, cfg, opts, mode, positions, caches,
+                 cache_length, prefill_capacity=None):
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    if opts.seq_shard and mode == "train":
+        # Block inputs are what remat saves: sharding them over the model
+        # axis (sequence parallelism) divides saved-activation memory by TP.
+        x = constrain_seq(x, opts.parallel)
+    else:
+        x = constrain_batch(x, opts.parallel)
+    for i, kind in enumerate(kinds):
+        c = caches[f"sub{i}"] if caches is not None else None
+        x, nc, aux = _apply_sublayer(
+            bp[f"sub{i}"], x, kind, cfg=cfg, opts=opts, mode=mode,
+            positions=positions, cache=c, cache_length=cache_length,
+            prefill_capacity=prefill_capacity,
+        )
+        x = constrain_batch(x, opts.parallel)
+        new_caches[f"sub{i}"] = nc
+        aux_total = aux_total + aux
+    return x, new_caches, aux_total
+
+
+def stack_apply(
+    params,
+    x: jax.Array,  # [B, S, D] embedded inputs
+    *,
+    cfg,
+    opts: ModelOptions,
+    mode: str,  # train | prefill | decode
+    positions: jax.Array,
+    caches=None,  # stacked cache pytree (decode), or None
+    cache_length=None,  # int32 scalar (decode)
+    prefill_capacity=None,  # total conversation length the caches must hold
+):
+    """Returns (x, new_caches, aux).  new_caches is None in train mode."""
+    pat = pattern_of(cfg)
+    n_blocks, tail = block_counts(cfg)
+    want_cache = mode != "train"
+
+    def body(x, bp, bc):
+        return _block_apply(
+            bp, x, pat, cfg=cfg, opts=opts, mode=mode, positions=positions,
+            caches=bc, cache_length=cache_length, prefill_capacity=prefill_capacity,
+        )
+
+    if mode == "train" and opts.remat == "full":
+        body = jax.checkpoint(body, policy=None)
+
+    if mode == "decode":
+        def scan_fn(carry, xs):
+            x, aux = carry
+            bp, bc = xs
+            x, nc, aux_i = body(x, bp, bc)
+            return (x, aux + aux_i), nc
+
+        (x, aux), new_caches = jax.lax.scan(
+            scan_fn, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], caches["blocks"]),
+        )
+    else:
+        def scan_fn(carry, bp):
+            x, aux = carry
+            x, nc, aux_i = body(x, bp, None)
+            return (x, aux + aux_i), (nc if want_cache else 0)
+
+        (x, aux), new_caches = jax.lax.scan(
+            scan_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"]
+        )
+        if not want_cache:
+            new_caches = None
+
+    out_caches = {"blocks": new_caches} if want_cache else None
+    if tail:
+        tc = caches["tail"] if (caches is not None and "tail" in caches) else None
+        x, ntc, aux_t = _block_apply(
+            params["tail"], x, tail, cfg=cfg, opts=opts, mode=mode,
+            positions=positions, caches=tc, cache_length=cache_length,
+            prefill_capacity=prefill_capacity,
+        )
+        aux = aux + aux_t
+        if want_cache:
+            out_caches["tail"] = ntc
+    return x, out_caches, aux
+
+
+# ------------------------------------------------------------- cache specs
+def _sublayer_cache_spec(cfg, kind, batch, seq_len, dtype):
+    if kind == "attn":
+        C = cache_capacity(cfg, seq_len, cfg.window)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, C, cfg.head_dim), dtype),
+            "v": jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, C, cfg.head_dim), dtype),
+        }
+    if kind == "ssm":
+        return ssm_cache_shape(cfg, batch, dtype)
+    if kind == "rglru":
+        return rg_cache_shape(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def stack_cache_specs(cfg, batch: int, seq_len: int, dtype):
+    """ShapeDtypeStruct pytree matching stack_apply's cache structure."""
+    pat = pattern_of(cfg)
+    n_blocks, tail = block_counts(cfg)
+
+    def stackify(spec):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_blocks,) + s.shape, s.dtype), spec
+        )
+
+    specs = {
+        "blocks": {
+            f"sub{i}": stackify(_sublayer_cache_spec(cfg, k, batch, seq_len, dtype))
+            for i, k in enumerate(pat)
+        }
+    }
+    if tail:
+        specs["tail"] = {
+            f"sub{i}": _sublayer_cache_spec(cfg, k, batch, seq_len, dtype)
+            for i, k in enumerate(tail)
+        }
+    return specs

@@ -1,0 +1,33 @@
+"""InternVL-style VLM support: the vision tower is a STUB per the grid spec.
+
+``input_specs`` hands the LM backbone precomputed patch embeddings
+[B, n_patches, d_model] (what InternViT + the MLP projector would emit);
+they replace the first ``n_patches`` token embeddings of the sequence, and
+the LM loss is masked over those positions.  Everything downstream (the
+InternLM2-flavoured GQA decoder) is the real, shared transformer stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def splice_patches(token_embeds: jax.Array, patch_embeds: jax.Array) -> jax.Array:
+    """Replace the first P positions of the embedded sequence with the
+    (stubbed) vision embeddings."""
+    p = patch_embeds.shape[1]
+    return jnp.concatenate(
+        [patch_embeds.astype(token_embeds.dtype), token_embeds[:, p:]], axis=1
+    )
+
+
+def vlm_loss_mask(cfg, batch_tokens: jax.Array) -> jax.Array:
+    """Mask out the patch positions: no next-token loss on image slots."""
+    b, s = batch_tokens.shape
+    pos = jnp.arange(s)[None, :]
+    return (pos >= cfg.n_patches).astype(jnp.float32)
+
+
+def patch_embed_spec(cfg, batch: int, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), dtype)

@@ -1,0 +1,164 @@
+"""ClusterScheduler: the paper's policies driving a real chip pool.
+
+The scheduler owns the job table (remaining work, fitted p-hat) and, at every
+*decision epoch* (job departure, arrival, failure — Thm 3 says allocations
+only need to change at departures; arrivals/failures are the production
+extensions, flagged as the paper's §4.3 heuristic), recomputes:
+
+    theta = policy(remaining_sizes, p)        # heSRPT / heLRPT / SRPT / ...
+    chips = quantize(theta, N)                # largest-remainder (+ slices)
+
+``advance_fluid`` runs the fluid model for simulation/benchmarks;
+``sched/elastic.py`` instead drives real training jobs and reports progress
+back through ``report_progress``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.policies import make_policy
+from repro.sched.estimator import SpeedupEstimator, blended_p
+from repro.sched.quantize import quantize_allocation, snap_to_slices
+
+
+@dataclass
+class Job:
+    job_id: str
+    size: float  # total work units (e.g. training steps x step cost)
+    p: float = 0.7  # prior speedup exponent
+    remaining: float = -1.0
+    arrival_time: float = 0.0
+    chips: int = 0
+    completion_time: Optional[float] = None
+    estimator: SpeedupEstimator = field(default_factory=SpeedupEstimator)
+
+    def __post_init__(self):
+        if self.remaining < 0:
+            self.remaining = self.size
+        self.estimator.prior_p = self.p
+
+
+class ClusterScheduler:
+    def __init__(
+        self,
+        n_chips: int,
+        *,
+        policy: str = "hesrpt",
+        min_chips: int = 1,
+        snap_slices: bool = False,
+        use_estimator: bool = False,
+    ):
+        self.n_chips = n_chips
+        self.policy_name = policy
+        self.min_chips = min_chips
+        self.snap_slices = snap_slices
+        self.use_estimator = use_estimator
+        self.jobs: Dict[str, Job] = {}
+        self.time = 0.0
+        self.events: List[dict] = []
+
+    # ------------------------------------------------------------- job table
+    def add_job(self, job: Job) -> None:
+        job.arrival_time = self.time
+        self.jobs[job.job_id] = job
+        self.events.append({"t": self.time, "event": "arrival", "job": job.job_id})
+
+    def active_jobs(self) -> List[Job]:
+        return [j for j in self.jobs.values() if j.remaining > 0]
+
+    def effective_p(self) -> float:
+        act = self.active_jobs()
+        if not act:
+            return 0.7
+        if self.use_estimator:
+            return blended_p([j.estimator for j in act], [j.remaining for j in act])
+        return float(np.mean([j.p for j in act]))
+
+    # ------------------------------------------------------ decision epochs
+    def allocations(self) -> Dict[str, int]:
+        """Recompute theta -> chips for the current active set."""
+        import jax.numpy as jnp
+
+        act = self.active_jobs()
+        if not act:
+            return {}
+        p = self.effective_p()
+        x = jnp.asarray([j.remaining for j in act])
+        pol = make_policy(
+            self.policy_name,
+            n_servers=float(self.n_chips),
+            alpha=float(np.median([j.remaining for j in act]) * p / self.n_chips),
+        )
+        theta = np.asarray(pol(x, p), dtype=np.float64)
+        chips = quantize_allocation(theta, self.n_chips, min_chips=self.min_chips)
+        if self.snap_slices:
+            chips = snap_to_slices(chips, self.n_chips)
+        out = {}
+        for j, c in zip(act, chips):
+            j.chips = int(c)
+            out[j.job_id] = int(c)
+        self.events.append(
+            {"t": self.time, "event": "allocate", "chips": dict(out), "p": p}
+        )
+        return out
+
+    # --------------------------------------------------------- progress I/O
+    def report_progress(self, job_id: str, work_done: float,
+                        wall_dt: float = 0.0) -> None:
+        job = self.jobs[job_id]
+        job.remaining = max(job.remaining - work_done, 0.0)
+        if wall_dt > 0:
+            self.time += 0.0  # wall time tracked by the driver
+            job.estimator.observe(job.chips, work_done / wall_dt)
+        if job.remaining == 0 and job.completion_time is None:
+            job.completion_time = self.time
+            self.events.append({"t": self.time, "event": "depart", "job": job_id})
+
+    # --------------------------------------------------------- fluid model
+    def advance_fluid(self, *, until_departure: bool = True, dt: float = 0.0):
+        """Advance the fluid simulation: each job progresses at s(chips) =
+        chips^p.  Used by benchmarks and the arrival-stream experiments."""
+        act = self.active_jobs()
+        if not act:
+            return 0.0
+        p = self.effective_p()
+        rates = np.array([max(j.chips, 0) ** p for j in act])
+        if until_departure:
+            with np.errstate(divide="ignore"):
+                tt = np.where(rates > 0, [j.remaining for j in act] / rates, np.inf)
+            step = float(np.min(tt))
+        else:
+            step = dt
+        if not np.isfinite(step):
+            raise RuntimeError("no job can make progress (all rates zero)")
+        self.time += step
+        for j, r in zip(act, rates):
+            j.remaining = max(j.remaining - step * r, 0.0)
+            if j.remaining == 0 and j.completion_time is None:
+                j.completion_time = self.time
+                self.events.append({"t": self.time, "event": "depart", "job": j.job_id})
+        return step
+
+    def run_fluid_to_completion(self) -> dict:
+        """Epoch loop: allocate -> advance to next departure -> repeat."""
+        guard = 0
+        while self.active_jobs():
+            self.allocations()
+            self.advance_fluid(until_departure=True)
+            guard += 1
+            if guard > 10 * len(self.jobs) + 100:
+                raise RuntimeError("scheduler failed to converge")
+        times = {j.job_id: j.completion_time for j in self.jobs.values()}
+        flows = {
+            jid: t - self.jobs[jid].arrival_time for jid, t in times.items()
+        }
+        return {
+            "completion_times": times,
+            "total_flow_time": float(sum(flows.values())),
+            "mean_flow_time": float(np.mean(list(flows.values()))),
+            "makespan": float(max(times.values())),
+        }

@@ -1,0 +1,76 @@
+"""Online estimation of the speedup exponent p from observed step throughput.
+
+The paper assumes p is known a priori; in production we fit it.  With
+``s(k) = c * k^p``, observed throughput T(k) at allocation k satisfies
+``log T = log c + p log k`` — ordinary least squares over the (k, T) history,
+optionally exponentially discounted so p tracks regime changes (e.g. a job
+entering a communication-bound phase has its *effective* p drop).
+
+``blended_p`` work-weights the per-job estimates into the single p heSRPT
+uses (the paper's single-speedup assumption; documented approximation for
+heterogeneous jobs, DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class SpeedupEstimator:
+    """Per-job (or per-job-class) p-hat from (chips, throughput) samples."""
+
+    prior_p: float = 0.7
+    prior_weight: float = 1.0
+    discount: float = 1.0  # 1.0 = no forgetting
+    history: List[Tuple[float, float, float]] = field(default_factory=list)
+    # entries: (log k, log T, weight)
+
+    def observe(self, chips: float, throughput: float) -> None:
+        if chips <= 0 or throughput <= 0:
+            return
+        for i, (lk, lt, w) in enumerate(self.history):
+            self.history[i] = (lk, lt, w * self.discount)
+        self.history.append((np.log(chips), np.log(throughput), 1.0))
+
+    def p_hat(self) -> float:
+        """OLS slope with a ridge-style pull toward the prior."""
+        if len(self.history) < 2:
+            return self.prior_p
+        lk = np.array([h[0] for h in self.history])
+        lt = np.array([h[1] for h in self.history])
+        w = np.array([h[2] for h in self.history])
+        wsum = w.sum()
+        mk, mt = (w * lk).sum() / wsum, (w * lt).sum() / wsum
+        var = (w * (lk - mk) ** 2).sum()
+        cov = (w * (lk - mk) * (lt - mt)).sum()
+        if var < 1e-12:
+            return self.prior_p  # all samples at one allocation: unidentifiable
+        slope = (cov + self.prior_weight * 0.0) / (var + self.prior_weight * 0.0 + 1e-12)
+        # blend with prior by effective sample size
+        alpha = var / (var + self.prior_weight)
+        p = alpha * slope + (1 - alpha) * self.prior_p
+        return float(np.clip(p, 0.01, 0.999))
+
+    def rate_at(self, chips: float) -> float:
+        """Predicted throughput c * k^p (c fit given p_hat)."""
+        if not self.history:
+            return chips ** self.p_hat()
+        p = self.p_hat()
+        lk = np.array([h[0] for h in self.history])
+        lt = np.array([h[1] for h in self.history])
+        w = np.array([h[2] for h in self.history])
+        logc = ((lt - p * lk) * w).sum() / w.sum()
+        return float(np.exp(logc) * chips ** p)
+
+
+def blended_p(estimators, remaining_work) -> float:
+    """Work-weighted mean p-hat across jobs (heSRPT needs one p)."""
+    ps = np.array([e.p_hat() for e in estimators])
+    w = np.asarray(remaining_work, dtype=np.float64)
+    if w.sum() <= 0:
+        return float(ps.mean()) if len(ps) else 0.7
+    return float((ps * w).sum() / w.sum())

@@ -1,0 +1,96 @@
+"""Fractional allocation -> whole chips.
+
+The paper's theta* treats the N servers as a continuously divisible resource
+(heSRPT Thm 7); a TPU cluster hands out whole chips (and prefers power-of-two
+mesh slices).  ``quantize_allocation`` is largest-remainder apportionment with
+a minimum-chips floor; ``snap_to_slices`` optionally restricts every job to
+ICI-friendly slice sizes {1, 2, 4, 8, ...}.
+
+Invariants (property-tested):
+- conservation: sum(chips) == n_chips when every active job can hold >= min
+  chips (else the smallest-theta jobs are queued with 0),
+- monotone: chips_i is within 1 (or one slice) of theta_i * n_chips,
+- active jobs with theta > 0 get >= min_chips whenever capacity allows.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def quantize_allocation(
+    theta: np.ndarray, n_chips: int, *, min_chips: int = 1
+) -> np.ndarray:
+    """Largest-remainder rounding of ``theta * n_chips`` (theta sums to <= 1)."""
+    theta = np.asarray(theta, dtype=np.float64)
+    active = theta > 0
+    n_active = int(active.sum())
+    chips = np.zeros(theta.shape, dtype=np.int64)
+    if n_active == 0 or n_chips <= 0:
+        return chips
+
+    if n_active * min_chips > n_chips:
+        # Oversubscribed: serve the largest-theta jobs, queue the rest.
+        order = np.argsort(-theta)
+        servable = order[: n_chips // min_chips]
+        sub = np.zeros_like(theta)
+        sub[servable] = theta[servable]
+        tot = sub.sum()
+        if tot <= 0:
+            return chips
+        return quantize_allocation(sub / tot, n_chips, min_chips=min_chips)
+
+    raw = theta * n_chips
+    base = np.floor(raw).astype(np.int64)
+    base = np.where(active, np.maximum(base, min_chips), 0)
+    overflow = int(base.sum()) - n_chips
+    if overflow > 0:
+        # The min-chips floor oversubscribed: trim from the largest holdings.
+        for _ in range(overflow):
+            cand = np.where(base > min_chips, base - raw, -np.inf)
+            j = int(np.argmax(cand))
+            base[j] -= 1
+    remainder = n_chips - int(base.sum())
+    if remainder > 0:
+        frac = np.where(active, raw - np.floor(raw), -1.0)
+        # Give the leftover chips to the largest fractional parts.
+        order = np.argsort(-frac)
+        for j in order[:remainder]:
+            base[j] += 1
+    return base
+
+
+def snap_to_slices(chips: np.ndarray, n_chips: int, *, slices=(1, 2, 4, 8, 16, 32, 64, 128, 256)) -> np.ndarray:
+    """Snap each job's count DOWN to the largest slice size <= count, then
+    hand leftovers (largest-first) to jobs whose next slice step fits."""
+    slices = sorted(slices)
+    chips = np.asarray(chips, dtype=np.int64).copy()
+
+    def snap_down(c):
+        out = 0
+        for s in slices:
+            if s <= c:
+                out = s
+        return out
+
+    snapped = np.array([snap_down(int(c)) for c in chips], dtype=np.int64)
+    left = n_chips - int(snapped.sum())
+    # upgrade greedily: job with the largest lost allocation first
+    while left > 0:
+        best, best_j = 0, -1
+        for j in range(len(snapped)):
+            if snapped[j] == 0 and chips[j] == 0:
+                continue
+            nxt = next((s for s in slices if s > snapped[j]), None)
+            if nxt is None:
+                continue
+            step = nxt - snapped[j]
+            lost = chips[j] - snapped[j]
+            if step <= left and lost >= best:
+                best, best_j = lost, j
+        if best_j < 0:
+            break
+        nxt = next(s for s in slices if s > snapped[best_j])
+        left -= nxt - snapped[best_j]
+        snapped[best_j] = nxt
+    return snapped

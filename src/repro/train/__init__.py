@@ -1,0 +1,22 @@
+"""Training substrate: optimizer, train/serve steps, checkpointing,
+gradient compression, fault tolerance."""
+
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_opt_state
+from repro.train.train_step import (
+    TrainConfig,
+    make_decode_step,
+    make_init_fn,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = [
+    "OptimizerConfig",
+    "TrainConfig",
+    "apply_updates",
+    "init_opt_state",
+    "make_decode_step",
+    "make_init_fn",
+    "make_prefill_step",
+    "make_train_step",
+]

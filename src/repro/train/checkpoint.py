@@ -1,0 +1,87 @@
+"""Mesh-agnostic numpy-tree checkpoints — the mechanism heSRPT's elasticity
+rides on.
+
+``save`` pulls every leaf to host and writes one ``.npz`` plus a JSON
+manifest of flattened tree paths.  ``restore`` rebuilds the tree and
+``device_put``s each leaf with the *target* sharding — which may belong to a
+completely different mesh shape than the checkpoint was written from.  A
+resize (checkpoint on 8 chips -> restore on 2) is therefore exactly
+save + restore.  Writes are atomic (tmp + rename) so a crash mid-save never
+corrupts the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, *, step: int = 0, extra: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    arrays = _flatten(tree)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "extra": extra or {},
+    }
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp.npz")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, os.path.join(path, "arrays.npz"))
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
+    with os.fdopen(fd, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+def load_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore(path: str, target_tree, shardings=None):
+    """Rebuild ``target_tree``'s structure from disk.  ``target_tree`` may be
+    arrays or ShapeDtypeStructs (only structure/shape/dtype are used).
+    ``shardings``: matching pytree of Sharding (or None -> default device)."""
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_flat = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(flat)
+    )
+    leaves = []
+    for (path_keys, leaf), sh in zip(flat, shard_flat):
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys
+        )
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs target {leaf.shape}"
+            )
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    return treedef.unflatten(leaves)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "manifest.json")) and os.path.exists(
+        os.path.join(path, "arrays.npz")
+    )

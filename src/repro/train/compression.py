@@ -1,0 +1,105 @@
+"""Gradient compression for the data-parallel all-reduce, with error feedback.
+
+Two schemes:
+- ``int8``: per-leaf symmetric quantization.  The psum runs on int32
+  accumulators of int8 payloads — 4x less link traffic than fp32 (8x vs the
+  naive fp32 tree at the wire level when links carry the int8 payload;
+  we model the accumulate-at-int32 TPU collective).
+- ``topk``: keep the largest ``k_frac`` fraction of entries per leaf (by
+  magnitude), psum the sparse values densified (value-only traffic reduction
+  is realized on hardware via gather-based collectives; under GSPMD we model
+  it as a masked dense psum and account the traffic analytically).
+
+Both keep per-shard ERROR FEEDBACK: the quantization/sparsification residual
+is added back into the next step's gradient, which is what keeps SGD/Adam
+convergence intact (Karimireddy et al., 2019).
+
+Used by the elastic data-parallel trainer (``sched/elastic.py``), where the
+gradient all-reduce is an explicit ``psum`` inside ``shard_map`` — the only
+place compression can actually intercept the collective.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_psum_int8(grads, err, axis_name: str):
+    """Per-leaf int8 quantize (+error feedback) -> psum(int32) -> dequant.
+    Returns (mean_grads, new_err).  Runs inside shard_map/pmap."""
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, e):
+        g = g.astype(jnp.float32) + e
+        q, scale = _quant_int8(g)
+        local = _dequant_int8(q, scale)
+        new_e = g - local
+        tot = jax.lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32)
+        # every shard has its own scale; psum the scaled payloads' mean scale
+        mean_scale = jax.lax.psum(scale, axis_name) / n
+        return tot * mean_scale / n, new_e
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = treedef.flatten_up_to(err)
+    out = [leaf(g, e) for g, e in zip(flat, eflat)]
+    return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
+        [o[1] for o in out]
+    )
+
+
+def compress_psum_topk(grads, err, axis_name: str, k_frac: float = 0.1):
+    """Magnitude top-k sparsification (+error feedback) -> psum.
+    Traffic model: only k_frac of values cross the link (accounted
+    analytically in the roofline); numerically we psum the masked tree."""
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, e):
+        g = g.astype(jnp.float32) + e
+        flat = g.reshape(-1)
+        k = max(1, int(flat.shape[0] * k_frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(g) >= thresh).astype(jnp.float32)
+        kept = g * mask
+        new_e = g - kept
+        tot = jax.lax.psum(kept, axis_name)
+        return tot / n, new_e
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = treedef.flatten_up_to(err)
+    out = [leaf(g, e) for g, e in zip(flat, eflat)]
+    return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
+        [o[1] for o in out]
+    )
+
+
+def plain_psum(grads, axis_name: str):
+    n = jax.lax.psum(1, axis_name)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads)
+
+
+def make_grad_reducer(scheme: Optional[str], axis_name: str, k_frac: float = 0.1):
+    """Returns reduce(grads, err) -> (mean_grads, new_err)."""
+    if scheme is None or scheme == "none":
+        return lambda g, e: (plain_psum(g, axis_name), e)
+    if scheme == "int8":
+        return lambda g, e: compress_psum_int8(g, e, axis_name)
+    if scheme == "topk":
+        return lambda g, e: compress_psum_topk(g, e, axis_name, k_frac)
+    raise ValueError(f"unknown compression scheme {scheme!r}")

@@ -1,0 +1,102 @@
+"""Fault tolerance: heartbeats, failure detection, checkpoint-restart loop.
+
+On a real multi-pod deployment every host runs a ``Heartbeat`` reporter and
+the coordinator runs ``FailureDetector``; in this single-process container
+the same code paths are exercised with *injected* failures (tests flip a
+worker's heartbeat off and assert the training loop restores from the last
+checkpoint and converges anyway).
+
+``run_with_recovery`` is the generic loop: it steps a training function,
+checkpoints every ``ckpt_every`` steps, and on (injected or real) failure
+restores params/opt_state from the last checkpoint and replays.  Straggler
+detection lives in ``sched/stragglers.py`` (it needs the speedup model).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+
+from repro.train import checkpoint
+
+
+@dataclass
+class Heartbeat:
+    """Last-seen timestamps per worker id."""
+
+    timeout_s: float = 30.0
+    last_seen: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, worker: int, now: Optional[float] = None) -> None:
+        self.last_seen[worker] = time.monotonic() if now is None else now
+
+    def dead_workers(self, now: Optional[float] = None) -> list:
+        now = time.monotonic() if now is None else now
+        return [w for w, t in self.last_seen.items() if now - t > self.timeout_s]
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests: fail at given step numbers."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.injected = []
+
+    def check(self, step: int) -> bool:
+        if step in self.fail_at:
+            self.fail_at.remove(step)
+            self.injected.append(step)
+            return True
+        return False
+
+
+def run_with_recovery(
+    step_fn: Callable,  # (params, opt_state, batch) -> (params, opt_state, metrics)
+    batches: Callable,  # (step) -> batch
+    params,
+    opt_state,
+    *,
+    n_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 10,
+    injector: Optional[FailureInjector] = None,
+    shardings=None,
+    on_metrics: Optional[Callable] = None,
+):
+    """Train for ``n_steps`` surviving failures.  Returns (params, opt_state,
+    history) where history records losses and recovery events."""
+    history = {"loss": [], "recoveries": []}
+    state = {"params": params, "opt_state": opt_state}
+    checkpoint.save(ckpt_dir, state, step=0)
+    last_ckpt_step = 0
+
+    step = 0
+    while step < n_steps:
+        if injector is not None and injector.check(step):
+            # Simulated node failure: wipe live state, restore from disk.
+            manifest = checkpoint.load_manifest(ckpt_dir)
+            state = checkpoint.restore(ckpt_dir, state, shardings)
+            history["recoveries"].append(
+                {"failed_at": step, "resumed_from": manifest["step"]}
+            )
+            step = manifest["step"]
+            continue
+
+        params, opt_state, metrics = step_fn(
+            state["params"], state["opt_state"], batches(step)
+        )
+        state = {"params": params, "opt_state": opt_state}
+        history["loss"].append(float(jax.device_get(metrics["loss"])))
+        if on_metrics is not None:
+            on_metrics(step, metrics)
+        step += 1
+        if step % ckpt_every == 0:
+            checkpoint.save(ckpt_dir, state, step=step)
+            last_ckpt_step = step
+
+    checkpoint.save(ckpt_dir, state, step=n_steps)
+    del last_ckpt_step
+    return state["params"], state["opt_state"], history

@@ -1,0 +1,120 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping.  No optax —
+the optimizer is part of the substrate we own.
+
+Parameters are fp32 masters (model code casts to the activation dtype at use
+sites, so grads arrive fp32).  Moments are fp32 and shaped like the params,
+hence they shard with the same PartitionSpecs (FSDP applies to optimizer
+state for free).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(step: jax.Array, cfg: OptimizerConfig) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params, *, keep_master: bool = False):
+    """``keep_master=True`` is the mixed-precision layout: params are stored
+    bf16 (so every FSDP gather / HBM read moves half the bytes) and the fp32
+    master copy lives here, updated by AdamW and re-cast to the param dtype
+    each step."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    out = {
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if keep_master:
+        out["master"] = jax.tree.map(
+            lambda p: jnp.asarray(p, jnp.float32), params
+        )
+    return out
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(params, grads, opt_state, cfg: OptimizerConfig):
+    """One AdamW step.  Returns (params, opt_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    step = opt_state["step"] + 1
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, pm, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pm
+        new_master = pm - lr * delta
+        return new_master.astype(p.dtype), m, v, new_master
+
+    masters = opt_state.get("master")
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_pm = (
+        treedef.flatten_up_to(masters)
+        if masters is not None
+        else [p.astype(jnp.float32) for p in flat_p]
+    )
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [
+        upd(p, pm.astype(jnp.float32), g, m, v)
+        for p, pm, g, m, v in zip(flat_p, flat_pm, flat_g, flat_m, flat_v)
+    ]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_opt = {
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    if masters is not None:
+        new_opt["master"] = treedef.unflatten([o[3] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_opt, metrics

@@ -1,0 +1,10 @@
+"""Serving steps (documented layout alias): prefill + single-token decode.
+
+The factories live in ``train_step.py`` next to the train step so the three
+step constructors share TrainConfig/microbatch plumbing; this module is the
+stable import path used by serving code.
+"""
+
+from repro.train.train_step import make_decode_step, make_prefill_step
+
+__all__ = ["make_decode_step", "make_prefill_step"]

@@ -1,0 +1,13 @@
+"""Shared test configuration.
+
+- float64 is enabled for the scheduler-math tests (closed-form vs simulator
+  comparisons need it).  Model/kernel code specifies its dtypes explicitly,
+  so this does not change model behaviour.
+- NOTE: we deliberately do NOT set XLA_FLAGS here; distribution tests that
+  need many fake devices spawn subprocesses with their own flags so ordinary
+  tests see the real single-CPU device.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,101 @@
+"""Closed forms (Thm 2, Thm 8) vs the event-driven simulator — exact math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    hesrpt,
+    hesrpt_completion_times,
+    hesrpt_total_flowtime,
+    helrpt,
+    make_policy,
+    omega_star,
+    optimal_makespan,
+    simulate,
+)
+
+
+@pytest.mark.parametrize("p", [0.05, 0.3, 0.5, 0.9, 0.99])
+def test_theorem8_matches_simulation(p):
+    rng = np.random.default_rng(0)
+    x = np.sort(rng.pareto(1.5, size=50) + 1.0)[::-1].copy()  # descending
+    n = 1e6
+    closed = hesrpt_total_flowtime(jnp.asarray(x), p, n)
+    sim = simulate(jnp.asarray(x), p, n, hesrpt)
+    np.testing.assert_allclose(closed, sim.total_flowtime, rtol=1e-8)
+
+
+@pytest.mark.parametrize("p", [0.3, 0.5, 0.9])
+def test_completion_times_closed_form_matches_sim(p):
+    rng = np.random.default_rng(1)
+    x = np.sort(rng.pareto(1.5, size=20) + 1.0)[::-1].copy()
+    n = 1000.0
+    times = hesrpt_completion_times(jnp.asarray(x), p, n)
+    sim = simulate(jnp.asarray(x), p, n, hesrpt)
+    np.testing.assert_allclose(times, sim.completion_times, rtol=1e-8)
+
+
+@pytest.mark.parametrize("p", [0.05, 0.5, 0.99])
+def test_theorem2_makespan_matches_helrpt_sim(p):
+    rng = np.random.default_rng(2)
+    x = rng.pareto(1.5, size=30) + 1.0
+    n = 1e4
+    closed = optimal_makespan(jnp.asarray(x), p, n)
+    sim = simulate(jnp.asarray(x), p, n, helrpt)
+    np.testing.assert_allclose(closed, sim.makespan, rtol=1e-8)
+    # Thm 1: ALL jobs complete at the same time under heLRPT.
+    np.testing.assert_allclose(
+        sim.completion_times, np.full(30, float(closed)), rtol=1e-8
+    )
+
+
+def test_omega_star_increasing():
+    om = omega_star(100, 0.5)
+    assert om[0] == 0
+    assert np.all(np.diff(np.asarray(om)[1:]) > 0)  # Lemma 3
+
+
+@pytest.mark.parametrize("p", [0.1, 0.5, 0.9])
+def test_hesrpt_beats_makespan_equality_on_flowtime(p):
+    """heSRPT total flow <= heLRPT total flow (heLRPT optimizes makespan)."""
+    rng = np.random.default_rng(3)
+    x = rng.pareto(1.5, size=25) + 1.0
+    n = 1e4
+    f_srpt = simulate(jnp.asarray(x), p, n, hesrpt).total_flowtime
+    f_lrpt = simulate(jnp.asarray(x), p, n, helrpt).total_flowtime
+    assert float(f_srpt) <= float(f_lrpt) * (1 + 1e-9)
+
+
+@pytest.mark.parametrize("p", [0.1, 0.5, 0.9])
+def test_helrpt_beats_hesrpt_on_makespan(p):
+    rng = np.random.default_rng(4)
+    x = rng.pareto(1.5, size=25) + 1.0
+    n = 1e4
+    m_lrpt = simulate(jnp.asarray(x), p, n, helrpt).makespan
+    m_srpt = simulate(jnp.asarray(x), p, n, hesrpt).makespan
+    assert float(m_lrpt) <= float(m_srpt) * (1 + 1e-9)
+
+
+@pytest.mark.parametrize("name", ["srpt", "equi", "hell", "knee"])
+@pytest.mark.parametrize("p", [0.05, 0.3, 0.5, 0.9, 0.99])
+def test_hesrpt_is_optimal_vs_competitors(name, p):
+    """The paper's headline claim: heSRPT minimizes total flow time."""
+    rng = np.random.default_rng(5)
+    x = rng.pareto(1.5, size=40) + 1.0
+    n = 1e6
+    pol = make_policy(name, n_servers=n, alpha=np.sqrt(p * np.median(x) / n))
+    f_opt = simulate(jnp.asarray(x), p, n, hesrpt).total_flowtime
+    f_other = simulate(jnp.asarray(x), p, n, pol).total_flowtime
+    assert float(f_opt) <= float(f_other) * (1 + 1e-9), (
+        f"heSRPT={float(f_opt)} vs {name}={float(f_other)} at p={p}"
+    )
+
+
+def test_simulation_is_jittable_and_vmappable():
+    xs = jnp.asarray(np.random.default_rng(6).pareto(1.5, (4, 16)) + 1.0)
+    f = jax.jit(jax.vmap(lambda x: simulate(x, 0.5, 100.0, hesrpt).total_flowtime))
+    out = f(xs)
+    assert out.shape == (4,)
+    assert np.all(np.isfinite(np.asarray(out)))

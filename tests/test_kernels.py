@@ -1,0 +1,219 @@
+"""Per-kernel shape/dtype sweeps: pallas(interpret=True) vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d",
+    [
+        (1, 4, 4, 128, 128, 64),  # MHA, block-aligned
+        (2, 4, 2, 256, 256, 64),  # GQA 2:1
+        (1, 8, 1, 128, 128, 32),  # MQA
+        (2, 4, 2, 130, 190, 64),  # ragged (padding paths)
+        (1, 2, 2, 64, 64, 128),   # small seq < block
+    ],
+)
+def test_flash_attention_causal(dtype, b, hq, hkv, sq, skv, d):
+    q, k, v = _mk((b, hq, sq, d), dtype), _mk((b, hkv, skv, d), dtype), _mk(
+        (b, hkv, skv, d), dtype
+    )
+    off = max(skv - sq, 0)
+    out = flash_attention(q, k, v, causal=True, q_offset=off, interpret=True)
+    expect = ref.attention(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _mk((1, 4, 256, 64)), _mk((1, 2, 256, 64)), _mk((1, 2, 256, 64))
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    expect = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    q, k, v = _mk((2, 2, 128, 64)), _mk((2, 2, 192, 64)), _mk((2, 2, 192, 64))
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    expect = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_shape_independence():
+    q, k, v = _mk((1, 2, 256, 64)), _mk((1, 2, 256, 64)), _mk((1, 2, 256, 64))
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    b = flash_attention(q, k, v, causal=True, block_q=128, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- SSD
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,p,n,blk",
+    [
+        (1, 128, 2, 32, 16, 64),
+        (2, 200, 3, 32, 16, 64),  # ragged
+        (1, 64, 1, 64, 128, 32),
+        (2, 96, 4, 16, 8, 128),  # block > seq
+    ],
+)
+def test_ssd_matches_recurrence(dtype, b, s, h, p, n, blk):
+    x = _mk((b, s, h, p), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), dtype)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm = _mk((b, s, n), dtype)
+    cm = _mk((b, s, n), dtype)
+    d = _mk((h,), jnp.float32)
+    y, st = ssd_scan(x, dt, a, bm, cm, d, block_q=blk, interpret=True,
+                     return_state=True)
+    y_ref, st_ref = ref.ssd(x, dt, a, bm, cm, d, return_state=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **tol
+    )
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_state_carries_decode():
+    """Final prefill state must continue the recurrence exactly."""
+    b, s, h, p, n = 1, 96, 2, 16, 8
+    x = _mk((b, s + 1, h, p))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s + 1, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm, cm, d = _mk((b, s + 1, n)), _mk((b, s + 1, n)), _mk((h,))
+    _, st = ssd_scan(x[:, :s], dt[:, :s], a, bm[:, :s], cm[:, :s], d,
+                     block_q=32, interpret=True, return_state=True)
+    y_step, _ = ref.ssd(x[:, s:], dt[:, s:], a, bm[:, s:], cm[:, s:], d,
+                        h0=st, return_state=True)
+    y_full = ref.ssd(x, dt, a, bm, cm, d)
+    np.testing.assert_allclose(
+        np.asarray(y_step[:, 0]), np.asarray(y_full[:, s]), rtol=1e-4, atol=1e-4
+    )
+
+
+# ------------------------------------------------------------------- RG-LRU
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,w,bt,bw",
+    [(2, 100, 48, 256, 512), (1, 256, 64, 64, 32), (2, 64, 128, 17, 40)],
+)
+def test_rglru_matches_scan(dtype, b, s, w, bt, bw):
+    x = _mk((b, s, w), dtype)
+    gx, ga = _mk((b, s, w), dtype), _mk((b, s, w), dtype)
+    ap = _mk((w,), jnp.float32)
+    rf = jax.nn.sigmoid(ga.astype(jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(ap)[None, None, :] * rf
+    a_t = jnp.exp(log_a).astype(dtype)
+    g = (jax.nn.sigmoid(gx.astype(jnp.float32)) * x.astype(jnp.float32)
+         * jnp.sqrt(-jnp.expm1(2 * log_a))).astype(dtype)
+    out = rglru_scan(a_t, g, block_t=bt, block_w=bw, interpret=True)
+    expect = ref.rglru(x, gx, ga, ap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOL[dtype]
+    )
+
+
+def test_ops_dispatch():
+    """impl='interpret' (kernel) and impl='ref' (oracle) agree through ops."""
+    from repro.kernels import ops
+
+    q, k, v = _mk((1, 4, 128, 64)), _mk((1, 2, 128, 64)), _mk((1, 2, 128, 64))
+    np.testing.assert_allclose(
+        np.asarray(ops.attention(q, k, v, impl="interpret")),
+        np.asarray(ops.attention(q, k, v, impl="ref")),
+        rtol=2e-5, atol=2e-5,
+    )
+    with pytest.raises(ValueError):
+        ops.attention(q, k, v, impl="nope")
+
+
+# ------------------------------------------------- chunked XLA implementations
+@pytest.mark.parametrize(
+    "kw",
+    [dict(causal=True), dict(causal=True, window=70), dict(causal=False),
+     dict(causal=True, q_offset=120)],
+)
+def test_chunked_attention_matches_ref(kw):
+    from repro.kernels import chunked
+
+    q = _mk((2, 4, 300, 32))
+    k = _mk((2, 2, 420, 32))
+    v = _mk((2, 2, 420, 32))
+    got = chunked.attention(q, k, v, block_q=128, block_k=128, **kw)
+    expect = ref.attention(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_ssd_matches_ref():
+    from repro.kernels import chunked
+
+    b, s, h, p, n = 2, 200, 3, 32, 16
+    x = _mk((b, s, h, p))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm, cm, d = _mk((b, s, n)), _mk((b, s, n)), _mk((h,))
+    h0 = _mk((b, h, p, n), scale=0.1)
+    y1, s1 = chunked.ssd(x, dt, a, bm, cm, d, block=64, h0=h0, return_state=True)
+    y2, s2 = ref.ssd(x, dt, a, bm, cm, d, h0=h0, return_state=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_rglru_matches_ref():
+    from repro.kernels import chunked
+
+    b, s, w = 2, 150, 48
+    x, gx, ga = _mk((b, s, w)), _mk((b, s, w)), _mk((b, s, w))
+    ap = _mk((w,))
+    h0 = _mk((b, w), scale=0.3)
+    y1, f1 = chunked.rglru(x, gx, ga, ap, h0=h0, return_state=True)
+    y2, f2 = ref.rglru(x, gx, ga, ap, h0=h0, return_state=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5, atol=1e-5)
+
+
+def test_model_forward_identical_across_impls():
+    """A full model forward agrees between ref and chunked lowering paths."""
+    from repro.configs import smoke_config
+    from repro.models import ModelOptions, build_model
+
+    for arch in ("mamba2-130m", "recurrentgemma-9b", "qwen2.5-14b"):
+        cfg = smoke_config(arch)
+        params = None
+        outs = {}
+        batch = {
+            "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 24)),
+                                  jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 24)),
+                                  jnp.int32),
+        }
+        for impl in ("ref", "chunked"):
+            m = build_model(cfg, ModelOptions(activation_dtype="float32",
+                                              remat="none", attn_impl=impl,
+                                              mixer_impl=impl))
+            if params is None:
+                params = m.init(jax.random.PRNGKey(0))
+            outs[impl], _ = m.loss_fn(params, batch)
+        np.testing.assert_allclose(float(outs["ref"]), float(outs["chunked"]),
+                                   rtol=1e-5)

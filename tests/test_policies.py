@@ -1,0 +1,118 @@
+"""Unit tests for the allocation policies (core/policies.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    equi,
+    helrpt,
+    hell,
+    hesrpt,
+    knee,
+    size_ranks_desc,
+    srpt,
+)
+
+
+def test_two_job_example():
+    """Paper §1: N=10, two unit jobs, p=.5 -> optimal split is 75/25."""
+    x = jnp.array([1.0, 1.0])
+    theta = hesrpt(x, 0.5)
+    # rank 1 (larger / completes last) gets (1/2)^2 = .25; rank 2 gets .75
+    np.testing.assert_allclose(np.sort(np.asarray(theta)), [0.25, 0.75], rtol=1e-12)
+    np.testing.assert_allclose(theta.sum(), 1.0, rtol=1e-12)
+
+
+def test_hesrpt_closed_form_three_jobs():
+    x = jnp.array([3.0, 2.0, 1.0])
+    p = 0.5
+    theta = hesrpt(x, p)
+    c = 1.0 / (1.0 - p)
+    expect = [
+        (1 / 3) ** c - 0.0,
+        (2 / 3) ** c - (1 / 3) ** c,
+        (3 / 3) ** c - (2 / 3) ** c,
+    ]
+    np.testing.assert_allclose(theta, expect, rtol=1e-12)
+    # increasing allocation with decreasing size (theta_1 < ... < theta_m)
+    assert np.all(np.diff(np.asarray(theta)) > 0)
+
+
+def test_size_ranks_desc_with_inactive():
+    x = jnp.array([5.0, 0.0, 7.0, 1.0])
+    ranks = size_ranks_desc(x)
+    np.testing.assert_array_equal(ranks, [2, 0, 1, 3])
+
+
+def test_hesrpt_ignores_departed_jobs():
+    x = jnp.array([4.0, 0.0, 1.0])
+    theta = hesrpt(x, 0.3)
+    assert theta[1] == 0
+    np.testing.assert_allclose(theta.sum(), 1.0, rtol=1e-12)
+
+
+def test_helrpt_allocations():
+    """Thm 2: gamma_i = x_i^(1/p) / sum x_j^(1/p); longer job gets more."""
+    x = jnp.array([2.0, 1.0])
+    p = 0.5
+    gamma = helrpt(x, p)
+    w = np.array([2.0, 1.0]) ** 2
+    np.testing.assert_allclose(gamma, w / w.sum(), rtol=1e-12)
+    assert gamma[0] > gamma[1]
+
+
+def test_srpt_gives_everything_to_smallest():
+    x = jnp.array([4.0, 2.0, 9.0])
+    theta = srpt(x)
+    np.testing.assert_array_equal(theta, [0.0, 1.0, 0.0])
+
+
+def test_equi_splits_evenly_over_active():
+    x = jnp.array([4.0, 0.0, 9.0])
+    theta = equi(x)
+    np.testing.assert_allclose(theta, [0.5, 0.0, 0.5], rtol=1e-12)
+
+
+@pytest.mark.parametrize("p", [0.05, 0.3, 0.49])
+def test_hell_waterfill_biases_short_jobs(p):
+    x = jnp.array([8.0, 4.0, 2.0, 1.0])
+    theta = hell(x, p, n_servers=1e6)
+    assert np.all(np.diff(np.asarray(theta)) > 0)  # short jobs get more
+    np.testing.assert_allclose(theta.sum(), 1.0, rtol=1e-12)
+
+
+@pytest.mark.parametrize("p", [0.5, 0.9, 0.99])
+def test_hell_is_srpt_for_high_p(p):
+    x = jnp.array([8.0, 4.0, 2.0, 1.0])
+    theta = hell(x, p, n_servers=1e6)
+    np.testing.assert_array_equal(theta, [0, 0, 0, 1.0])
+
+
+def test_knee_undersubscribed_proportional():
+    x = jnp.array([4.0, 1.0])
+    p = 0.5
+    alpha = 1e3  # huge threshold -> tiny knees -> undersubscribed
+    theta = knee(x, p, n_servers=1e6, alpha=alpha)
+    kn = (p * np.array([4.0, 1.0]) / alpha) ** (1 / (1 + p))
+    np.testing.assert_allclose(theta, kn / kn.sum(), rtol=1e-9)
+
+
+def test_knee_oversubscribed_prefix():
+    x = jnp.array([4.0, 1.0])
+    p = 0.5
+    n = 10.0
+    alpha = 1e-6  # tiny threshold -> huge knees -> oversubscribed
+    theta = knee(x, p, n_servers=n, alpha=alpha)
+    kn_small = (p * 1.0 / alpha) ** (1 / (1 + p))
+    assert kn_small > n  # even the small job's knee exceeds the system
+    np.testing.assert_allclose(theta, [0.0, 1.0], atol=1e-12)
+
+
+@pytest.mark.parametrize("policy", [hesrpt, helrpt, equi])
+def test_allocations_are_distributions(policy):
+    x = jnp.array([9.0, 5.0, 5.0, 0.5, 0.0])
+    theta = policy(x, 0.37)
+    assert np.all(np.asarray(theta) >= 0)
+    np.testing.assert_allclose(np.asarray(theta).sum(), 1.0, rtol=1e-9)
+    assert theta[-1] == 0  # departed job holds nothing

@@ -1,0 +1,156 @@
+"""Property-based tests (hypothesis) for the paper's structural claims and
+the scheduler's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    equi,
+    hesrpt,
+    hesrpt_total_flowtime,
+    helrpt,
+    omega_star,
+    simulate,
+    srpt,
+)
+from repro.sched.quantize import quantize_allocation, snap_to_slices
+
+sizes_strategy = st.lists(
+    st.floats(min_value=0.05, max_value=100.0, allow_nan=False),
+    min_size=2,
+    max_size=12,
+)
+p_strategy = st.floats(min_value=0.05, max_value=0.95)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sizes_strategy, p_strategy)
+def test_hesrpt_allocations_form_distribution(xs, p):
+    theta = np.asarray(hesrpt(jnp.asarray(xs), p))
+    assert np.all(theta >= -1e-12)
+    np.testing.assert_allclose(theta.sum(), 1.0, rtol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sizes_strategy, p_strategy)
+def test_hesrpt_smaller_jobs_get_more(xs, p):
+    """theta increases as remaining size decreases (ties excluded)."""
+    xs = sorted(set(round(x, 6) for x in xs), reverse=True)
+    if len(xs) < 2:
+        return
+    theta = np.asarray(hesrpt(jnp.asarray(xs), p))
+    assert np.all(np.diff(theta) > -1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes_strategy, p_strategy)
+def test_hesrpt_beats_competitors(xs, p):
+    """Optimality (Thm 7/8): no competitor achieves lower total flow time."""
+    x = jnp.asarray(sorted(xs, reverse=True))
+    n = 1000.0
+    opt = float(simulate(x, p, n, hesrpt).total_flowtime)
+    for pol in (equi, srpt, helrpt):
+        other = float(simulate(x, p, n, pol).total_flowtime)
+        assert opt <= other * (1 + 1e-6), (pol.__name__, opt, other)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes_strategy, p_strategy)
+def test_theorem8_closed_form_equals_simulation(xs, p):
+    x = jnp.asarray(sorted(xs, reverse=True))
+    closed = float(hesrpt_total_flowtime(x, p, 1000.0))
+    sim = float(simulate(x, p, 1000.0, hesrpt).total_flowtime)
+    np.testing.assert_allclose(closed, sim, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes_strategy, p_strategy)
+def test_scale_free_property_along_trajectory(xs, p):
+    """Thm 4: during job i's lifetime, sum_{j<i} theta_j / theta_i is the
+    constant omega_i.  Verified on the simulated heSRPT trajectory."""
+    x = jnp.asarray(sorted(xs, reverse=True))
+    m = x.shape[0]
+    res = simulate(x, p, 100.0, hesrpt)
+    om = np.asarray(omega_star(m, p))
+    theta_tr = np.asarray(res.theta_trace)  # [E, M]
+    sizes_tr = np.asarray(res.sizes_trace)
+    for e in range(theta_tr.shape[0]):
+        active = sizes_tr[e] > 1e-12
+        th = theta_tr[e]
+        if active.sum() < 2:
+            continue
+        # jobs sorted descending by x0: rank i = index among active
+        idx = np.where(active)[0]
+        for r, j in enumerate(idx):
+            if th[j] <= 1e-12:
+                continue
+            omega_hat = th[idx[:r]].sum() / th[j]
+            np.testing.assert_allclose(omega_hat, om[r], rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes_strategy, p_strategy)
+def test_size_invariance(xs, p):
+    """Thm 6: theta depends only on the number of active jobs."""
+    a = np.asarray(hesrpt(jnp.asarray(sorted(xs, reverse=True)), p))
+    b = np.asarray(
+        hesrpt(jnp.asarray(sorted([x * 7.3 + 1 for x in xs], reverse=True)), p)
+    )
+    np.testing.assert_allclose(a, b, rtol=1e-9)
+
+
+def test_hesrpt_limits():
+    """p -> 1: heSRPT -> SRPT; p -> 0: heSRPT -> EQUI."""
+    x = jnp.asarray([5.0, 3.0, 1.0])
+    near_srpt = np.asarray(hesrpt(x, 0.999))
+    assert near_srpt[2] > 0.99  # smallest job takes (almost) everything
+    near_equi = np.asarray(hesrpt(x, 1e-4))
+    np.testing.assert_allclose(near_equi, [1 / 3] * 3, atol=1e-3)
+
+
+# ------------------------------------------------------------- quantization
+chips_strategy = st.integers(min_value=1, max_value=512)
+
+
+@settings(max_examples=50, deadline=None)
+@given(sizes_strategy, p_strategy, chips_strategy)
+def test_quantizer_conservation_and_proximity(xs, p, n_chips):
+    theta = np.asarray(hesrpt(jnp.asarray(sorted(xs, reverse=True)), p))
+    chips = quantize_allocation(theta, n_chips, min_chips=1)
+    assert chips.sum() <= n_chips
+    m = (theta > 0).sum()
+    if m <= n_chips:  # every job servable
+        assert chips.sum() == n_chips
+        assert np.all(chips[theta > 0] >= 1)
+        # within 1 chip of fractional share unless pushed by the min floor
+        raw = theta * n_chips
+        slack = np.maximum(np.abs(chips - raw), 0)
+        assert np.all((slack <= m) | (chips == 1))
+    else:  # oversubscribed: largest-theta jobs served
+        assert np.all(chips[theta == 0] == 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sizes_strategy, p_strategy, st.integers(min_value=8, max_value=256))
+def test_slice_snapping_stays_within_budget(xs, p, n_chips):
+    theta = np.asarray(hesrpt(jnp.asarray(sorted(xs, reverse=True)), p))
+    chips = quantize_allocation(theta, n_chips, min_chips=1)
+    snapped = snap_to_slices(chips, n_chips)
+    assert snapped.sum() <= n_chips
+    allowed = {1, 2, 4, 8, 16, 32, 64, 128, 256, 0}
+    assert set(int(c) for c in snapped) <= allowed
+
+
+# --------------------------------------------------------------- estimator
+@settings(max_examples=20, deadline=None)
+@given(p_strategy)
+def test_estimator_recovers_p(p):
+    from repro.sched.estimator import SpeedupEstimator
+
+    est = SpeedupEstimator(prior_p=0.5, prior_weight=1e-6)
+    for k in [1, 2, 4, 8, 16, 32]:
+        est.observe(k, 3.7 * k ** p)
+    assert abs(est.p_hat() - p) < 0.02, (est.p_hat(), p)
