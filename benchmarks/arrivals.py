@@ -1,34 +1,59 @@
-"""Beyond paper: heSRPT as an online heuristic under a Poisson arrival
-stream (the paper's §4.3 open question — it proves optimality only for all
-jobs present at t=0, and suggests re-running heSRPT on the active set at
-each arrival; this benchmark quantifies that heuristic).
+"""Beyond paper: heSRPT under an online arrival stream (the paper's §4.3
+open question — it proves optimality only for all jobs present at t=0, and
+suggests re-running heSRPT on the active set at each arrival; this benchmark
+quantifies that heuristic in heavy traffic).
 
 Jobs arrive Poisson(rate), sizes Pareto(1.5)+1.  At every arrival AND
 departure epoch the policy recomputes allocations over the active set
 (remaining sizes).  Mean flow time is compared across policies at several
 system loads; each cell is the mean over seeds.
+
+Two implementations:
+
+- ``run_stream_reference`` / ``run_stream``: the original per-event Python
+  loop over ``ClusterScheduler`` (one JAX dispatch per event).  Kept as the
+  ground-truth reference for cross-checking and as the speedup baseline.
+- ``repro.core.arrivals.simulate_online``: a single ``jax.lax.scan`` over
+  the event horizon, jit + vmap over seeds × loads.  ``run``/``main`` use
+  it to sweep 1000+ jobs × 100+ seeds × loads in one device call per
+  policy — the heavy-traffic scale the Python loop cannot reach.
 """
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
+POLICIES = ("hesrpt", "equi", "srpt")
 
-def run_stream(policy: str, *, n_jobs=60, rate=1.0, p=0.5, n_chips=256,
-               seed=0):
-    from repro.sched import ClusterScheduler, Job
 
+def stream_trace(n_jobs: int, rate: float, seed: int, size_alpha: float = 1.5):
+    """The benchmark's canonical random trace: Poisson arrivals, Pareto sizes."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, n_jobs))
-    sizes = rng.pareto(1.5, n_jobs) + 1.0
+    sizes = rng.pareto(size_alpha, n_jobs) + 1.0
+    return arrivals, sizes
 
-    sched = ClusterScheduler(n_chips, policy=policy)
+
+def run_stream_reference(policy: str, arrivals, sizes, *, p=0.5, n_chips=256,
+                         quantize=True) -> np.ndarray:
+    """Per-event Python loop over ``ClusterScheduler``; returns per-job flow
+    times.  ``quantize=False`` keeps fractional chips (the pure fluid model),
+    which is what ``core/arrivals.py`` must reproduce to 1e-6."""
+    from repro.sched import ClusterScheduler, Job
+
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    n_jobs = len(sizes)
+    sched = ClusterScheduler(n_chips, policy=policy, quantize=quantize)
     i = 0  # next arrival index
     guard = 0
     while i < n_jobs or sched.active_jobs():
         # admit everything that has arrived by now
         while i < n_jobs and arrivals[i] <= sched.time + 1e-12:
             sched.add_job(Job(f"j{i}", size=float(sizes[i]), p=p))
+            sched.jobs[f"j{i}"].arrival_time = float(arrivals[i])
             i += 1
         act = sched.active_jobs()
         if not act:
@@ -46,40 +71,123 @@ def run_stream(policy: str, *, n_jobs=60, rate=1.0, p=0.5, n_chips=256,
         guard += 1
         if guard > 50 * n_jobs:
             raise RuntimeError("arrival-stream sim did not converge")
-    flows = [
+    return np.array([
         j.completion_time - j.arrival_time for j in sched.jobs.values()
-    ]
+    ])
+
+
+def run_stream(policy: str, *, n_jobs=60, rate=1.0, p=0.5, n_chips=256,
+               seed=0, quantize=True):
+    arrivals, sizes = stream_trace(n_jobs, rate, seed)
+    flows = run_stream_reference(policy, arrivals, sizes, p=p,
+                                 n_chips=n_chips, quantize=quantize)
     return float(np.mean(flows))
 
 
-def run(rates=(0.5, 2.0, 8.0), policies=("hesrpt", "equi", "srpt"),
-        n_seeds=3, p=0.5, n_chips=256, n_jobs=60):
-    out = {}
-    for rate in rates:
-        row = {}
-        for pol in policies:
-            vals = [
-                run_stream(pol, n_jobs=n_jobs, rate=rate, p=p,
-                           n_chips=n_chips, seed=s)
-                for s in range(n_seeds)
-            ]
-            row[pol] = float(np.mean(vals))
-        out[rate] = row
-    return out
+def cross_check(*, n_jobs=10, rate=1.0, p=0.5, n_chips=64, seed=0,
+                policies=POLICIES) -> float:
+    """Max relative per-job flow-time error: lax.scan simulator vs the
+    Python ``ClusterScheduler`` fluid path (continuous allocation)."""
+    import jax.numpy as jnp
+
+    from repro.core import make_policy
+    from repro.core.arrivals import simulate_online
+
+    arrivals, sizes = stream_trace(n_jobs, rate, seed)
+    worst = 0.0
+    for name in policies:
+        ref = run_stream_reference(name, arrivals, sizes, p=p,
+                                   n_chips=n_chips, quantize=False)
+        res = simulate_online(jnp.asarray(sizes), jnp.asarray(arrivals), p,
+                              float(n_chips), make_policy(name, n_servers=n_chips))
+        got = np.asarray(res.flow_times)
+        worst = max(worst, float(np.max(np.abs(got - ref) / ref)))
+    return worst
 
 
-def main():
-    res = run()
-    lines = [f"{'arrival rate':>12s} " + " ".join(f"{p:>10s}" for p in
-                                                  ("hesrpt", "equi", "srpt"))]
+def run(rates=(0.5, 2.0, 8.0), policies=POLICIES, n_seeds=100, p=0.5,
+        n_chips=256, n_jobs=1000, seed=0):
+    """Heavy-traffic sweep on the JAX-native online simulator."""
+    from repro.core.arrivals import load_sweep
+
+    return load_sweep(policies, rates, n_jobs=n_jobs, n_seeds=n_seeds, p=p,
+                      n_servers=float(n_chips), seed=seed)
+
+
+def measure_speedup(*, n_jobs, n_seeds, rates, p=0.5, n_chips=256,
+                    n_python_streams=1) -> dict:
+    """Wall-clock: per-event Python loop vs the lax.scan sweep, per stream.
+
+    The Python loop is timed on ``n_python_streams`` full-size streams of
+    the same workload (same n_jobs / rate / policy) and normalized
+    per-stream; running it on all streams would take hours, which is the
+    point.  The JAX side is timed end-to-end on the whole sweep (compile
+    excluded via a warmup at identical shapes).
+    """
+    rate_mid = rates[len(rates) // 2]
+    t0 = time.perf_counter()
+    for s in range(n_python_streams):
+        # quantize=False: the same continuous fluid model the lax.scan
+        # sweep simulates, so both sides do identical per-event work.
+        run_stream("hesrpt", n_jobs=n_jobs, rate=rate_mid, p=p,
+                   n_chips=n_chips, seed=s, quantize=False)
+    t_py_stream = (time.perf_counter() - t0) / n_python_streams
+
+    # warmup at identical shapes so the timed run excludes compilation
+    run(rates=rates, n_seeds=n_seeds, p=p, n_chips=n_chips, n_jobs=n_jobs)
+    t0 = time.perf_counter()
+    run(rates=rates, n_seeds=n_seeds, p=p, n_chips=n_chips, n_jobs=n_jobs)
+    t_jax_total = time.perf_counter() - t0
+
+    n_streams = len(rates) * n_seeds * len(POLICIES)
+    t_jax_stream = t_jax_total / n_streams
+    return {
+        "python_s_per_stream": t_py_stream,
+        "jax_s_per_stream": t_jax_stream,
+        "jax_total_s": t_jax_total,
+        "n_streams": n_streams,
+        "speedup": t_py_stream / t_jax_stream,
+    }
+
+
+def main(quick: bool = False):
+    rates = (0.5, 2.0, 8.0)
+    n_jobs, n_seeds = (200, 20) if quick else (1000, 100)
+
+    t0 = time.perf_counter()
+    res = run(rates=rates, n_seeds=n_seeds, n_jobs=n_jobs)
+    sweep_s = time.perf_counter() - t0
+
+    lines = [f"{n_jobs} jobs x {n_seeds} seeds x {len(rates)} loads x "
+             f"{len(POLICIES)} policies (lax.scan online simulator, "
+             f"{sweep_s:.1f}s incl. compile)"]
+    lines.append(f"{'arrival rate':>12s} " + " ".join(f"{p:>10s}"
+                                                      for p in POLICIES))
     ok = True
     for rate, row in res.items():
-        lines.append(f"{rate:12.1f} " + " ".join(f"{row[p]:10.4f}" for p in
-                                                 ("hesrpt", "equi", "srpt")))
+        lines.append(f"{rate:12.1f} " + " ".join(f"{row[p]:10.4f}"
+                                                 for p in POLICIES))
         ok &= row["hesrpt"] <= min(row["equi"], row["srpt"]) * 1.02
     lines.append(f"heSRPT-heuristic <= best competitor at every load: {ok}")
-    return "\n".join(lines), res
+
+    worst = cross_check()
+    lines.append(f"cross-check vs ClusterScheduler fluid path (10-job "
+                 f"Poisson, continuous): max rel err {worst:.2e}")
+
+    sp = measure_speedup(n_jobs=n_jobs, n_seeds=n_seeds, rates=rates)
+    lines.append(
+        f"speedup vs per-event Python loop at equal workload: "
+        f"{sp['speedup']:.0f}x  (python {sp['python_s_per_stream']:.2f}s/stream, "
+        f"jax {sp['jax_s_per_stream'] * 1e3:.1f}ms/stream over "
+        f"{sp['n_streams']} streams)")
+    return "\n".join(lines), {"sweep": res, "cross_check": worst,
+                              "speedup": sp}
 
 
 if __name__ == "__main__":
+    import jax
+
+    # Same rationale as benchmarks/run.py: scheduler math (cross-check vs
+    # the f64 ClusterScheduler path) needs f64 to hit 1e-6 agreement.
+    jax.config.update("jax_enable_x64", True)
     print(main()[0])

@@ -50,10 +50,11 @@ def main() -> None:
     text, _ = fig4_policies.main(quick=quick)
     print(text)
 
-    _section("Beyond paper — Poisson arrival stream (paper §4.3 heuristic)")
+    _section("Beyond paper — Poisson arrival stream at heavy traffic "
+             + ("(quick)" if quick else "(1000 jobs x 100 seeds, lax.scan)"))
     from benchmarks import arrivals
 
-    text, _ = arrivals.main()
+    text, _ = arrivals.main(quick=quick)
     print(text)
 
     _section("Beyond paper — scheduler decision cost at cluster scale")

@@ -1,5 +1,16 @@
-"""Core heSRPT math: policies, closed forms, fluid simulator, diagnostics."""
+"""Core heSRPT math: policies, closed forms, fluid simulators (batch and
+online/arrival-stream), diagnostics."""
 
+from repro.core.arrivals import (
+    OnlineSimResult,
+    deterministic_arrivals,
+    load_sweep,
+    load_sweep_raw,
+    pareto_sizes,
+    poisson_arrivals,
+    simulate_online,
+    simulate_online_ranked,
+)
 from repro.core.flowtime import (
     hesrpt_completion_times,
     hesrpt_mean_flowtime,
@@ -10,20 +21,25 @@ from repro.core.flowtime import (
 )
 from repro.core.policies import (
     POLICY_NAMES,
+    RANK_POLICIES,
     equi,
     helrpt,
     hell,
     hesrpt,
     knee,
     make_policy,
+    make_rank_policy,
     size_ranks_desc,
     srpt,
 )
 from repro.core.simulator import SimResult, simulate, total_flowtime
 
 __all__ = [
+    "OnlineSimResult",
     "POLICY_NAMES",
+    "RANK_POLICIES",
     "SimResult",
+    "deterministic_arrivals",
     "equi",
     "helrpt",
     "hell",
@@ -32,10 +48,17 @@ __all__ = [
     "hesrpt_mean_flowtime",
     "hesrpt_total_flowtime",
     "knee",
+    "load_sweep",
+    "load_sweep_raw",
     "make_policy",
+    "make_rank_policy",
     "omega_star",
     "optimal_makespan",
+    "pareto_sizes",
+    "poisson_arrivals",
     "simulate",
+    "simulate_online",
+    "simulate_online_ranked",
     "size_ranks_desc",
     "speedup",
     "srpt",

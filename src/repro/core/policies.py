@@ -48,6 +48,44 @@ def size_ranks_desc(x: jax.Array) -> jax.Array:
     return jnp.where(active, ranks, 0)
 
 
+# Rank-space policy forms.  Theorem 6 proves the optimal allocation is
+# size-invariant: it depends on the remaining sizes only through their
+# descending-size *ranks* and the active count ``m``.  These helpers take
+# the ranks directly (rank 0 == inactive), which is what lets the online
+# simulator's fast path (core/arrivals.py) carry ranks incrementally
+# through its scan instead of re-sorting at every event.
+def hesrpt_theta_from_ranks(
+    ranks: jax.Array, m: jax.Array, p: jax.Array, *, dtype=None
+) -> jax.Array:
+    """Theorem 7 in rank space: theta_i = (r/m)^(1/(1-p)) - ((r-1)/m)^(1/(1-p))."""
+    dtype = dtype or jnp.result_type(float)
+    active = ranks > 0
+    rf = ranks.astype(dtype)
+    c = 1.0 / (1.0 - p)
+    m_safe = jnp.maximum(m, 1).astype(dtype)
+    hi = (rf / m_safe) ** c
+    lo = ((rf - 1.0) / m_safe) ** c
+    return jnp.where(active, hi - lo, 0.0)
+
+
+def equi_theta_from_ranks(
+    ranks: jax.Array, m: jax.Array, p: jax.Array | None = None, *, dtype=None
+) -> jax.Array:
+    dtype = dtype or jnp.result_type(float)
+    active = ranks > 0
+    m_safe = jnp.maximum(m, 1).astype(dtype)
+    return jnp.where(active, 1.0 / m_safe, jnp.zeros((), dtype))
+
+
+def srpt_theta_from_ranks(
+    ranks: jax.Array, m: jax.Array, p: jax.Array | None = None, *, dtype=None
+) -> jax.Array:
+    """The whole system to the smallest active job — rank m by definition."""
+    dtype = dtype or jnp.result_type(float)
+    return jnp.where((ranks == m) & (m > 0), jnp.ones((), dtype),
+                     jnp.zeros((), dtype))
+
+
 def hesrpt(x: jax.Array, p: jax.Array) -> jax.Array:
     """heSRPT (Theorem 7): the optimal allocation for total flow time.
 
@@ -62,13 +100,8 @@ def hesrpt(x: jax.Array, p: jax.Array) -> jax.Array:
     """
     active = _active(x)
     m = jnp.sum(active)
-    ranks = size_ranks_desc(x).astype(x.dtype)
-    c = 1.0 / (1.0 - p)
-    m_safe = jnp.maximum(m, 1).astype(x.dtype)
-    hi = (ranks / m_safe) ** c
-    lo = ((ranks - 1.0) / m_safe) ** c
-    theta = jnp.where(active, hi - lo, 0.0)
-    return theta
+    ranks = size_ranks_desc(x)
+    return hesrpt_theta_from_ranks(ranks, m, p, dtype=x.dtype)
 
 
 def helrpt(x: jax.Array, p: jax.Array) -> jax.Array:
@@ -188,6 +221,24 @@ def knee(
         return jnp.where(active, grant / n_servers, 0.0)
 
     return jax.lax.cond(total_knee <= n_servers, undersub, oversub, None)
+
+
+# Rank-space registry: policies whose allocation is a pure function of the
+# descending-size ranks (Thm 6 size-invariance).  For all three, the rate is
+# non-increasing in remaining size, so between decision epochs the size
+# order is preserved and the smallest active job departs first — the two
+# invariants the online simulator's sort-free fast path relies on
+# (core/arrivals.py::simulate_online_ranked).
+RANK_POLICIES = {
+    "hesrpt": hesrpt_theta_from_ranks,
+    "equi": equi_theta_from_ranks,
+    "srpt": srpt_theta_from_ranks,
+}
+
+
+def make_rank_policy(name: str):
+    """Rank-space form ``(ranks, m, p) -> theta`` or None if unavailable."""
+    return RANK_POLICIES.get(name.lower())
 
 
 # Registry used by the simulator / benchmarks. HELL and KNEE close over the

@@ -32,7 +32,7 @@ class Job:
     p: float = 0.7  # prior speedup exponent
     remaining: float = -1.0
     arrival_time: float = 0.0
-    chips: int = 0
+    chips: float = 0  # whole chips normally; fractional when quantize=False
     completion_time: Optional[float] = None
     estimator: SpeedupEstimator = field(default_factory=SpeedupEstimator)
 
@@ -51,12 +51,17 @@ class ClusterScheduler:
         min_chips: int = 1,
         snap_slices: bool = False,
         use_estimator: bool = False,
+        quantize: bool = True,
     ):
         self.n_chips = n_chips
         self.policy_name = policy
         self.min_chips = min_chips
         self.snap_slices = snap_slices
         self.use_estimator = use_estimator
+        # quantize=False keeps the paper's continuously-divisible allocation
+        # (fractional chips) — the fluid reference that core/arrivals.py is
+        # cross-checked against.
+        self.quantize = quantize
         self.jobs: Dict[str, Job] = {}
         self.time = 0.0
         self.events: List[dict] = []
@@ -79,8 +84,9 @@ class ClusterScheduler:
         return float(np.mean([j.p for j in act]))
 
     # ------------------------------------------------------ decision epochs
-    def allocations(self) -> Dict[str, int]:
-        """Recompute theta -> chips for the current active set."""
+    def allocations(self) -> Dict[str, float]:
+        """Recompute theta -> chips for the current active set (int-valued
+        when quantizing, fractional chips when ``quantize=False``)."""
         import jax.numpy as jnp
 
         act = self.active_jobs()
@@ -94,13 +100,17 @@ class ClusterScheduler:
             alpha=float(np.median([j.remaining for j in act]) * p / self.n_chips),
         )
         theta = np.asarray(pol(x, p), dtype=np.float64)
-        chips = quantize_allocation(theta, self.n_chips, min_chips=self.min_chips)
-        if self.snap_slices:
-            chips = snap_to_slices(chips, self.n_chips)
+        if self.quantize:
+            chips = quantize_allocation(theta, self.n_chips, min_chips=self.min_chips)
+            if self.snap_slices:
+                chips = snap_to_slices(chips, self.n_chips)
+            chips = [int(c) for c in chips]
+        else:
+            chips = [float(c) for c in theta * self.n_chips]
         out = {}
         for j, c in zip(act, chips):
-            j.chips = int(c)
-            out[j.job_id] = int(c)
+            j.chips = c
+            out[j.job_id] = c
         self.events.append(
             {"t": self.time, "event": "allocate", "chips": dict(out), "p": p}
         )

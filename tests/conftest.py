@@ -6,8 +6,35 @@
 - NOTE: we deliberately do NOT set XLA_FLAGS here; distribution tests that
   need many fake devices spawn subprocesses with their own flags so ordinary
   tests see the real single-CPU device.
+- Known seed-state failures (tests/KNOWN_FAILURES.md) are marked
+  xfail(strict=False) at collection, so any run — tier-1 or full — enforces
+  "no new failures" instead of tolerating a red suite.  Fix a test, delete
+  its line from KNOWN_FAILURES.md, and a regression breaks CI again.
 """
 
+import re
+from pathlib import Path
+
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", True)
+
+_KNOWN_FAILURES = Path(__file__).parent / "KNOWN_FAILURES.md"
+
+
+def _known_failure_nodeids() -> frozenset[str]:
+    if not _KNOWN_FAILURES.exists():
+        return frozenset()
+    ids = re.findall(r"^- `([^`]+)`", _KNOWN_FAILURES.read_text(), re.M)
+    return frozenset(ids)
+
+
+def pytest_collection_modifyitems(config, items):
+    known = _known_failure_nodeids()
+    for item in items:
+        if item.nodeid in known:
+            item.add_marker(pytest.mark.xfail(
+                reason="known seed failure — tracked in tests/KNOWN_FAILURES.md",
+                strict=False,
+            ))

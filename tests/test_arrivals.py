@@ -1,0 +1,146 @@
+"""Online (arrival-stream) simulator: batch limit, cluster cross-check,
+policy dominance under load, jit/vmap, trace-driven arrivals."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_policy, simulate, speedup
+from repro.core.arrivals import (
+    deterministic_arrivals,
+    load_sweep,
+    pareto_sizes,
+    poisson_arrivals,
+    simulate_online,
+    simulate_online_ranked,
+)
+from repro.core.policies import make_rank_policy
+
+ONLINE_POLICIES = ("hesrpt", "equi", "srpt")
+
+
+@pytest.mark.parametrize("name", ONLINE_POLICIES)
+@pytest.mark.parametrize("p", [0.3, 0.9])
+def test_batch_limit_matches_offline_simulator(name, p):
+    """All arrivals at t=0 — the online scan must reproduce the batch-only
+    simulator job-for-job (same epochs, same fp ops)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.pareto(1.5, 24) + 1.0)
+    pol = make_policy(name, n_servers=1e3)
+    off = simulate(x, p, 1e3, pol)
+    on = simulate_online(x, jnp.zeros(24), p, 1e3, pol)
+    np.testing.assert_allclose(on.completion_times, off.completion_times,
+                               rtol=1e-9)
+    np.testing.assert_allclose(on.total_flowtime, off.total_flowtime,
+                               rtol=1e-9)
+    np.testing.assert_allclose(on.makespan, off.makespan, rtol=1e-9)
+
+
+@pytest.mark.parametrize("name", ONLINE_POLICIES)
+def test_crosscheck_cluster_fluid_poisson_trace(name):
+    """Per-job flow times agree with the ClusterScheduler per-event Python
+    loop (continuous allocation, no quantization) on a 10-job Poisson trace."""
+    from benchmarks.arrivals import run_stream_reference, stream_trace
+
+    arrivals, sizes = stream_trace(10, rate=1.0, seed=3)
+    ref = run_stream_reference(name, arrivals, sizes, p=0.5, n_chips=64,
+                               quantize=False)
+    res = simulate_online(jnp.asarray(sizes), jnp.asarray(arrivals), 0.5,
+                          64.0, make_policy(name, n_servers=64.0))
+    np.testing.assert_allclose(res.flow_times, ref, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ONLINE_POLICIES)
+def test_ranked_fast_path_matches_generic(name):
+    """The sort-free incremental-rank scan must agree with the generic
+    sort-per-event path on Poisson traces (continuous sizes, no ties)."""
+    rng = np.random.default_rng(11)
+    for _ in range(2):
+        x = jnp.asarray(rng.pareto(1.5, 40) + 1.0)
+        arr = jnp.asarray(np.cumsum(rng.exponential(0.3, 40)))
+        gen = simulate_online(x, arr, 0.5, 128.0,
+                              make_policy(name, n_servers=128.0))
+        fast = simulate_online_ranked(x, arr, 0.5, 128.0,
+                                      make_rank_policy(name))
+        np.testing.assert_allclose(fast.completion_times,
+                                   gen.completion_times, rtol=1e-9)
+
+
+@pytest.mark.parametrize("name", ONLINE_POLICIES)
+def test_ranked_fast_path_ties_exchange_invariant(name):
+    """Exact size ties: per-job order may permute within the tied group
+    (documented SRPT tie-break difference) but the completion-time multiset
+    and totals are exchange-invariant."""
+    x = jnp.asarray([2.0, 2.0, 2.0, 1.0])
+    arr = jnp.asarray([0.0, 0.0, 1.0, 1.0])
+    gen = simulate_online(x, arr, 0.5, 64.0, make_policy(name, n_servers=64.0))
+    fast = simulate_online_ranked(x, arr, 0.5, 64.0, make_rank_policy(name))
+    np.testing.assert_allclose(np.sort(np.asarray(fast.completion_times)),
+                               np.sort(np.asarray(gen.completion_times)),
+                               rtol=1e-12)
+    np.testing.assert_allclose(fast.total_flowtime, gen.total_flowtime,
+                               rtol=1e-12)
+
+
+def test_online_hesrpt_dominates_every_load():
+    """heSRPT-online beats EQUI and SRPT at every tested load for p=0.5
+    (paired seeds, 2% tolerance as in the seed arrival-stream test)."""
+    res = load_sweep(ONLINE_POLICIES, (0.5, 2.0, 8.0), n_jobs=60, n_seeds=16,
+                     p=0.5, n_servers=256.0, seed=0)
+    for rate, row in res.items():
+        best_other = min(row["equi"], row["srpt"])
+        assert row["hesrpt"] <= best_other * 1.02, (rate, row)
+
+
+def test_isolated_arrivals_have_unit_slowdown():
+    """Arrivals spaced far apart -> every job runs alone on all N servers ->
+    flow time x/s(N) exactly, slowdown 1."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.pareto(1.5, 12) + 1.0)
+    arr = deterministic_arrivals(12, rate=1e-3)  # 1000 time units apart
+    res = simulate_online(x, arr, 0.5, 256.0, make_policy("hesrpt"))
+    np.testing.assert_allclose(res.slowdowns, 1.0, rtol=1e-8)
+    np.testing.assert_allclose(res.flow_times, x / speedup(256.0, 0.5),
+                               rtol=1e-8)
+
+
+def test_simultaneous_and_unsorted_arrivals():
+    """Ties and out-of-order arrival vectors are handled; results come back
+    in input order."""
+    x = jnp.asarray([4.0, 1.0, 2.0, 1.5])
+    arr = jnp.asarray([3.0, 0.0, 3.0, 0.0])  # two pairs of ties, unsorted
+    res = simulate_online(x, arr, 0.5, 64.0, make_policy("hesrpt"))
+    assert np.all(np.isfinite(np.asarray(res.completion_times)))
+    # completion after arrival, for every job, in input order
+    assert np.all(np.asarray(res.flow_times) > 0)
+    # permuting the jobs permutes the outputs identically
+    perm = jnp.asarray([2, 0, 3, 1])
+    res_p = simulate_online(x[perm], arr[perm], 0.5, 64.0,
+                            make_policy("hesrpt"))
+    np.testing.assert_allclose(res_p.completion_times,
+                               res.completion_times[perm], rtol=1e-12)
+
+
+def test_online_simulator_jit_and_vmap_over_seeds():
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        arr = poisson_arrivals(k1, 30, 2.0)
+        x0 = pareto_sizes(k2, 30)
+        return simulate_online(x0, arr, 0.5, 128.0,
+                               make_policy("hesrpt")).mean_flowtime
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    out = jax.jit(jax.vmap(one))(keys)
+    assert out.shape == (8,)
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert np.all(np.asarray(out) > 0)
+
+
+def test_load_sweep_raw_shapes_and_metric_validation():
+    from repro.core.arrivals import load_sweep_raw
+
+    raw = load_sweep_raw(("equi",), (1.0, 4.0), n_jobs=20, n_seeds=5)
+    assert raw["equi"].shape == (2, 5)
+    with pytest.raises(ValueError):
+        load_sweep_raw(("equi",), (1.0,), n_jobs=4, n_seeds=2, metric="nope")

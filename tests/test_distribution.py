@@ -33,6 +33,7 @@ def run_with_fake_devices(body: str, n_devices: int = 8, timeout: int = 600) -> 
     return proc.stdout
 
 
+@pytest.mark.slow
 def test_mesh_build_and_sharded_train_step():
     out = run_with_fake_devices(
         """
@@ -106,6 +107,7 @@ def test_checkpoint_restore_across_mesh_shapes():
     assert "RESTORED" in out
 
 
+@pytest.mark.slow
 def test_moe_ragged_shard_map_matches_dense():
     out = run_with_fake_devices(
         """
@@ -131,6 +133,7 @@ def test_moe_ragged_shard_map_matches_dense():
     assert "MOE_OK" in out
 
 
+@pytest.mark.slow
 def test_elastic_cluster_end_to_end():
     """heSRPT-scheduled multi-job elastic training: losses drop, resizes
     happen, flow time tracks the fluid optimum."""
@@ -164,6 +167,7 @@ def test_elastic_cluster_end_to_end():
     assert "E2E_OK" in out
 
 
+@pytest.mark.slow
 def test_miniature_dryrun():
     """Tiny production-mesh analogue: lower+compile a reduced arch on a
     (2,2,2) pod/data/model mesh and check the roofline terms come out."""
@@ -206,6 +210,7 @@ def test_miniature_dryrun():
     assert "DRYRUN_OK" in out
 
 
+@pytest.mark.slow
 def test_fault_tolerant_recovery_loop():
     out = run_with_fake_devices(
         """

@@ -32,6 +32,7 @@ TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=5e-2, at
         (1, 2, 2, 64, 64, 128),   # small seq < block
     ],
 )
+@pytest.mark.slow
 def test_flash_attention_causal(dtype, b, hq, hkv, sq, skv, d):
     q, k, v = _mk((b, hq, sq, d), dtype), _mk((b, hkv, skv, d), dtype), _mk(
         (b, hkv, skv, d), dtype
@@ -44,6 +45,7 @@ def test_flash_attention_causal(dtype, b, hq, hkv, sq, skv, d):
     )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("window", [16, 64, 100])
 def test_flash_attention_sliding_window(window):
     q, k, v = _mk((1, 4, 256, 64)), _mk((1, 2, 256, 64)), _mk((1, 2, 256, 64))
@@ -77,6 +79,7 @@ def test_flash_attention_block_shape_independence():
         (2, 96, 4, 16, 8, 128),  # block > seq
     ],
 )
+@pytest.mark.slow
 def test_ssd_matches_recurrence(dtype, b, s, h, p, n, blk):
     x = _mk((b, s, h, p), dtype)
     dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), dtype)
@@ -117,6 +120,7 @@ def test_ssd_state_carries_decode():
     "b,s,w,bt,bw",
     [(2, 100, 48, 256, 512), (1, 256, 64, 64, 32), (2, 64, 128, 17, 40)],
 )
+@pytest.mark.slow
 def test_rglru_matches_scan(dtype, b, s, w, bt, bw):
     x = _mk((b, s, w), dtype)
     gx, ga = _mk((b, s, w), dtype), _mk((b, s, w), dtype)
@@ -193,6 +197,7 @@ def test_chunked_rglru_matches_ref():
     np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_model_forward_identical_across_impls():
     """A full model forward agrees between ref and chunked lowering paths."""
     from repro.configs import smoke_config

@@ -35,6 +35,7 @@ def make_batch(cfg, b=2, s=16, with_labels=True):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_forward_and_train_step(arch):
     cfg = smoke_config(arch)
@@ -57,6 +58,7 @@ def test_smoke_forward_and_train_step(arch):
     assert delta > 0, f"{arch}: train step did not update params"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_prefill_decode_consistency(arch):
     cfg = smoke_config(arch)
@@ -142,6 +144,7 @@ def test_moe_ragged_local_matches_dense():
     np.testing.assert_allclose(float(aux_d), float(aux_r), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_cache_drops_old_tokens():
     """With a ring cache of size window, decode must match a model that can
     only see the last `window` positions."""

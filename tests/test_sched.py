@@ -16,6 +16,7 @@ from repro.train.compression import (
 )
 
 
+@pytest.mark.slow
 def test_cluster_fluid_matches_closed_form():
     rng = np.random.default_rng(0)
     x = np.sort(rng.pareto(1.5, 16) + 1.0)[::-1]
