@@ -29,7 +29,8 @@ def run(sizes=(3000.0, 2000.0, 1000.0), p: float = 0.5, n_servers: float = 500.0
 def main():
     out = run()
     lines = ["t_epoch | theta_1 theta_2 theta_3 | x_1 x_2 x_3"]
-    for t, th, xs in zip(out["epoch_times"], out["theta_trace"], out["sizes_trace"]):
+    for t, th, xs in zip(out["epoch_times"], out["theta_trace"],
+                         out["sizes_trace"], strict=True):
         lines.append(
             f"{t:7.2f} | " + " ".join(f"{v:7.4f}" for v in th) + " | "
             + " ".join(f"{v:7.1f}" for v in xs)

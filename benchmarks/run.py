@@ -1,5 +1,11 @@
 """Benchmark aggregator: one section per paper table/figure + beyond-paper
-benches.  ``python -m benchmarks.run [--quick]``."""
+benches.  ``python -m benchmarks.run [--quick] [--smoke]``.
+
+``--quick`` shrinks the expensive sweeps; ``--smoke`` is the CI tier-1
+gate: every section that exercises the allocation engine runs at tiny
+sizes (seconds, not minutes) so the sweeps cannot silently rot, and the
+long-running extras (speedup timings, kernel micro-bench) are skipped.
+"""
 
 from __future__ import annotations
 
@@ -20,7 +26,8 @@ def _section(title):
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv
+    smoke = "--smoke" in sys.argv
+    quick = smoke or "--quick" in sys.argv
     t0 = time.time()
 
     _section("Fig 3 — heSRPT 3-job trace (s(k)=k^0.5, N=500)")
@@ -51,23 +58,33 @@ def main() -> None:
     print(text)
 
     _section("Beyond paper — Poisson arrival stream at heavy traffic "
-             + ("(quick)" if quick else "(1000 jobs x 100 seeds, lax.scan)"))
+             + ("(smoke)" if smoke else
+                "(quick)" if quick else "(1000 jobs x 100 seeds, lax.scan)"))
     from benchmarks import arrivals
 
-    text, _ = arrivals.main(quick=quick)
+    text, _ = arrivals.main(quick=quick, smoke=smoke)
     print(text)
 
-    _section("Beyond paper — scheduler decision cost at cluster scale")
-    from benchmarks import sched_scale
+    _section("Beyond paper — quantized whole-chips allocation at scale "
+             + ("(smoke)" if smoke else
+                "(quick)" if quick else "(1000 jobs x 20 seeds, lax.scan)"))
+    from benchmarks import quantized
 
-    text, _ = sched_scale.main()
+    text, _ = quantized.main(quick=quick, smoke=smoke)
     print(text)
 
-    _section("Beyond paper — kernel micro-bench (CPU; TPU story = roofline)")
-    from benchmarks import kernels_bench
+    if not smoke:
+        _section("Beyond paper — scheduler decision cost at cluster scale")
+        from benchmarks import sched_scale
 
-    text, _ = kernels_bench.main()
-    print(text)
+        text, _ = sched_scale.main()
+        print(text)
+
+        _section("Beyond paper — kernel micro-bench (CPU; TPU story = roofline)")
+        from benchmarks import kernels_bench
+
+        text, _ = kernels_bench.main()
+        print(text)
 
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
 

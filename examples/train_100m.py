@@ -11,12 +11,13 @@ flags in launch/train.py (this example keeps everything single-host).
 """
 
 import argparse
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 
-import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config  # noqa: E402

@@ -7,13 +7,6 @@ runs a forward/train step on one CPU device in a test.
 
 from __future__ import annotations
 
-from repro.configs.base import (
-    SHAPE_BY_NAME,
-    SHAPES,
-    ModelConfig,
-    ShapeConfig,
-    cell_applicable,
-)
 from repro.configs import (
     internvl2_1b,
     mamba2_130m,
@@ -25,6 +18,13 @@ from repro.configs import (
     recurrentgemma_9b,
     stablelm_12b,
     whisper_base,
+)
+from repro.configs.base import (
+    SHAPE_BY_NAME,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cell_applicable,
 )
 
 _REGISTRY = {

@@ -10,8 +10,7 @@ Everything is a frozen dataclass (hashable -> usable as a jit static arg).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Tuple
+from dataclasses import dataclass
 
 FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
 
@@ -54,7 +53,7 @@ class ModelConfig:
     ssm_expand: int = 2
     ssm_conv: int = 4
     # hybrid (recurrentgemma)
-    layer_pattern: Tuple[str, ...] = ()
+    layer_pattern: tuple[str, ...] = ()
     lru_width: int = 0
     # attention variant
     window: int = 0
@@ -190,7 +189,7 @@ class ShapeConfig:
             raise ValueError(f"bad shape kind {self.kind}")
 
 
-SHAPES: Tuple[ShapeConfig, ...] = (
+SHAPES: tuple[ShapeConfig, ...] = (
     ShapeConfig("train_4k", seq_len=4_096, global_batch=256, kind="train"),
     ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill"),
     ShapeConfig("decode_32k", seq_len=32_768, global_batch=128, kind="decode"),
@@ -200,7 +199,7 @@ SHAPES: Tuple[ShapeConfig, ...] = (
 SHAPE_BY_NAME = {s.name: s for s in SHAPES}
 
 
-def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """(runs?, reason).  long_500k needs sub-quadratic attention; every arch
     here has a decoder so decode shapes always run (whisper's 32k KV is far
     beyond its 448 positions — exercised mechanically per the grid spec)."""

@@ -7,7 +7,6 @@ configs so every experiment in EXPERIMENTS.md is reproducible from a config.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -16,9 +15,9 @@ class SchedulerExperiment:
     n_servers: float
     n_jobs: int
     pareto_shape: float
-    p_values: Tuple[float, ...]
+    p_values: tuple[float, ...]
     n_seeds: int
-    policies: Tuple[str, ...]
+    policies: tuple[str, ...]
 
 
 # Figure 4: N = 1e6 servers, M = 500 jobs, Pareto(1.5) sizes, 10 seeds,

@@ -6,12 +6,10 @@ on simulated trajectories, and by the scheduler to report system efficiency.
 
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.flowtime import speedup
 from repro.core.simulator import SimResult
 
 
@@ -44,7 +42,7 @@ def scale_free_constants(result: SimResult) -> jax.Array:
     return jnp.where(active & (theta > 0), csum / theta, jnp.nan)
 
 
-def summarize(result: SimResult, p: jax.Array) -> Dict[str, jax.Array]:
+def summarize(result: SimResult, p: jax.Array) -> dict[str, jax.Array]:
     theta0 = result.theta_trace[0]
     return {
         "total_flowtime": result.total_flowtime,

@@ -1,4 +1,4 @@
-"""Online (arrival-stream) fluid simulator — fully JAX-native.
+"""Online (arrival-stream) simulation — thin wrappers over ``core/engine.py``.
 
 The paper proves heSRPT optimal when every job is present at t=0 and leaves
 the arrival-stream case as a heuristic (§4.3): re-run the policy on the
@@ -7,40 +7,44 @@ active set at every arrival and departure.  The follow-up heavy-traffic work
 classes) studies exactly this online regime, which is why it is the
 foundation for every heavy-traffic scenario in this repo.
 
-``simulate_online`` generalizes ``core/simulator.py``'s batch-only
-``simulate`` to an *event-driven* trajectory over arrivals *and* departures
-in one ``jax.lax.scan``:
+The event-driven ``lax.scan`` itself lives in ``core/engine.py`` (one
+engine for batch, online, and quantized-chips trajectories); this module
+keeps the historical public API —
 
-- Theorem 3 still applies between events: the allocation is a pure function
-  of the remaining-size vector of the *arrived, unfinished* jobs, so the
-  fluid trajectory is piecewise linear with breakpoints only at arrivals and
-  departures.  An M-job stream therefore has at most ``2M`` events, and a
-  fixed-length scan of ``2M`` steps simulates it exactly — no Python event
-  loop, no per-event device dispatch.
-- Each scan step advances to the next event: ``dt = min(next departure,
-  next arrival)``.  Departures zero the finishing job (with the same
-  relative-tolerance clamp as the batch simulator); arrivals are admitted by
-  a ``searchsorted`` on the arrival times, so any number of simultaneous
-  arrivals costs a single step.
-- Everything is ``jit``-able and ``vmap``-able: one device call sweeps
-  thousands of seeds × loads × policies (see ``load_sweep``).
+- :func:`simulate_online` — generic sort-per-event path for any policy,
+- :func:`simulate_online_ranked` — sort-free incremental-rank fast path for
+  rank-space policies (heSRPT/EQUI/SRPT),
+- :func:`simulate_online_quantized` — whole-chips allocation (the
+  ``ClusterScheduler`` integer regime) in the same scan,
+- :func:`load_sweep` / :func:`load_sweep_raw` — jit+vmap sweeps over
+  seeds × loads for any registered scenario (Poisson, bursty MAP,
+  estimation noise, ...; see ``core/scenarios.py``),
 
-Arrival processes: ``poisson_arrivals`` (the classic M/G stream),
-``deterministic_arrivals`` (fixed spacing), or any user-supplied trace —
-``simulate_online`` takes the raw arrival-time vector, so trace-driven
-replay is the base case, not an extension.
+— and converts engine trajectories into per-job flow times and slowdowns
+(:class:`OnlineSimResult`).  Arrival processes and size distributions come
+from the scenario registry; ``poisson_arrivals`` & co are re-exported here
+for compatibility.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence
+from collections.abc import Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.flowtime import speedup
 from repro.core.policies import Policy, make_policy, make_rank_policy
+from repro.core.scenarios import (  # noqa: F401  (re-exported public API)
+    Scenario,
+    deterministic_arrivals,
+    make_scenario,
+    pareto_sizes,
+    poisson_arrivals,
+)
 
 
 class OnlineSimResult(NamedTuple):
@@ -51,6 +55,22 @@ class OnlineSimResult(NamedTuple):
     mean_flowtime: jax.Array  # scalar
     mean_slowdown: jax.Array  # scalar
     makespan: jax.Array  # scalar, last departure time
+
+
+def _finalize(x0, arrival_times, times, p, n_servers) -> OnlineSimResult:
+    """Per-job flow times / slowdowns from completion times (input order)."""
+    flows = times - arrival_times
+    alone = x0 / speedup(jnp.asarray(n_servers, x0.dtype), p)
+    slow = flows / alone
+    return OnlineSimResult(
+        completion_times=times,
+        flow_times=flows,
+        slowdowns=slow,
+        total_flowtime=jnp.sum(flows),
+        mean_flowtime=jnp.mean(flows),
+        mean_slowdown=jnp.mean(slow),
+        makespan=jnp.max(times),
+    )
 
 
 def simulate_online(
@@ -76,66 +96,18 @@ def simulate_online(
     Jobs that never depart within the horizon report ``inf`` times.
     """
     x0 = jnp.asarray(x0)
-    M = x0.shape[0]
-    E = 2 * M if horizon is None else horizon
     dtype = jnp.result_type(x0.dtype, jnp.float32)
     x0 = x0.astype(dtype)
     arrival_times = jnp.asarray(arrival_times).astype(dtype)
-    tol = rel_tol * jnp.max(x0)
-
-    # Event logic walks arrivals in time order; un-sort at the end.
-    order = jnp.argsort(arrival_times)
-    arr = arrival_times[order]
-    xs = x0[order]
-    idx = jnp.arange(M)
-
-    def body(carry, _):
-        x, t, i, times = carry
-        active = (idx < i) & (x > 0)
-        x_act = jnp.where(active, x, 0.0)
-        theta = policy(x_act, p).astype(dtype)
-        rate = speedup(theta * n_servers, p)
-        tt = jnp.where(active & (rate > 0), x / rate, jnp.inf)
-        dt_dep = jnp.min(tt)  # inf when nothing is active
-        t_next_arr = jnp.where(i < M, arr[jnp.minimum(i, M - 1)], jnp.inf)
-        dt_arr = jnp.maximum(t_next_arr - t, 0.0)
-        dt = jnp.minimum(dt_dep, dt_arr)
-        any_event = jnp.isfinite(dt)
-        dt = jnp.where(any_event, dt, 0.0)
-        # Landing on an arrival pins t to the exact arrival time so the
-        # searchsorted admission below cannot miss it to float rounding.
-        admit = any_event & (dt_arr <= dt_dep)
-        t_new = jnp.where(admit, t_next_arr, t + dt)
-        x_new = jnp.where(active, x - dt * rate, x)
-        # As in the batch simulator: the argmin job departs by construction
-        # when the departure is the next event; fp residue must not keep it.
-        take_dep = any_event & (dt_dep <= dt_arr)
-        departing = (idx == jnp.argmin(tt)) & active & take_dep
-        x_new = jnp.where(departing | (active & (x_new <= tol)), 0.0, x_new)
-        newly_done = active & (x_new == 0.0)
-        times = jnp.where(newly_done, t_new, times)
-        i_new = jnp.searchsorted(arr, t_new, side="right").astype(i.dtype)
-        i_new = jnp.maximum(i, i_new)  # monotone even on no-op steps
-        return (x_new, t_new, i_new, times), None
-
-    init = (xs, jnp.zeros((), dtype), jnp.zeros((), jnp.int32),
-            jnp.zeros(M, dtype))
-    (x_fin, _, _, times), _ = jax.lax.scan(body, init, None, length=E)
-    times = jnp.where(x_fin > 0, jnp.inf, times)
-    times = jnp.zeros(M, dtype).at[order].set(times)  # back to input order
-
-    flows = times - arrival_times
-    alone = x0 / speedup(jnp.asarray(n_servers, dtype), p)
-    slow = flows / alone
-    return OnlineSimResult(
-        completion_times=times,
-        flow_times=flows,
-        slowdowns=slow,
-        total_flowtime=jnp.sum(flows),
-        mean_flowtime=jnp.mean(flows),
-        mean_slowdown=jnp.mean(slow),
-        makespan=jnp.max(times),
+    res = engine.run(
+        x0,
+        arrival_times,
+        p,
+        engine.continuous_rule(policy, n_servers, dtype=dtype),
+        horizon=horizon,
+        rel_tol=rel_tol,
     )
+    return _finalize(x0, arrival_times, res.completion_times, p, n_servers)
 
 
 def simulate_online_ranked(
@@ -149,131 +121,99 @@ def simulate_online_ranked(
 ) -> OnlineSimResult:
     """Sort-free fast path of ``simulate_online`` for rank-space policies.
 
-    ``rank_policy(ranks, m, p) -> theta`` must be a pure function of the
-    descending-size ranks (Thm 6 size-invariance), with rates non-increasing
-    in remaining size — true for heSRPT, EQUI and SRPT (see
-    ``core.policies.RANK_POLICIES``).  Those two properties give two
-    invariants this scan exploits:
-
-    - the size order of active jobs never changes between events, so the
-      rank vector can be *carried* and updated in O(M) per event (an arrival
-      inserts one rank, a departure removes the highest) instead of
-      re-sorted — XLA's per-step sort is what makes the generic path ~20x
-      slower at M=1000;
-    - the next departure is always the current-smallest active job (rank m),
-      so no argmin over per-job finish times is needed.
-
-    Admissions are one job per step, so the default ``2M`` horizon (M
-    arrivals + M departures) is exact.  Agreement with the generic path is
-    property-tested in tests/test_arrivals.py.
-
-    Tie handling: jobs with *exactly* equal remaining sizes get distinct
-    adjacent ranks (ties break by arrival order, as in
-    ``size_ranks_desc``).  For SRPT this serves tied jobs in the opposite
-    order to the generic path's ``argmin`` — per-job times permute within
-    the tied group, while totals/means are exchange-invariant.  Ties are
-    measure-zero for continuous size distributions.
+    See ``engine.run_ranked`` for the invariants this exploits (carried
+    descending-size ranks instead of a per-event sort — ~20x the generic
+    path at M=1000) and for tie-handling semantics.
     """
     x0 = jnp.asarray(x0)
-    M = x0.shape[0]
-    E = 2 * M if horizon is None else horizon
     dtype = jnp.result_type(x0.dtype, jnp.float32)
     x0 = x0.astype(dtype)
     arrival_times = jnp.asarray(arrival_times).astype(dtype)
-
-    order = jnp.argsort(arrival_times)  # one sort total, not one per event
-    arr = arrival_times[order]
-    xs = x0[order]
-    idx = jnp.arange(M)
-
-    def body(carry, _):
-        x, t, i, ranks, m, times = carry
-        theta = rank_policy(ranks, m, p, dtype=dtype)
-        rate = speedup(theta * n_servers, p)
-        # Next departure: the smallest active job, i.e. rank m, found by
-        # argmax since ranks are unique with maximum m (0 when inactive).
-        small = jnp.argmax(ranks)
-        has_active = m > 0
-        x_s = x[small]
-        r_s = rate[small]
-        dt_dep = jnp.where(has_active & (r_s > 0), x_s / r_s, jnp.inf)
-        t_next_arr = jnp.where(i < M, arr[jnp.minimum(i, M - 1)], jnp.inf)
-        dt_arr = jnp.maximum(t_next_arr - t, 0.0)
-        dt = jnp.minimum(dt_dep, dt_arr)
-        any_event = jnp.isfinite(dt)
-        dt = jnp.where(any_event, dt, 0.0)
-        admit = any_event & (dt_arr <= dt_dep)
-        take_dep = any_event & (dt_dep <= dt_arr)
-        t_new = jnp.where(admit, t_next_arr, t + dt)
-        active = ranks > 0
-        x_new = jnp.where(active, jnp.maximum(x - dt * rate, 0.0), x)
-        # Departure: drop rank m; every other active rank stays valid.
-        departing = (idx == small) & active & take_dep
-        x_new = jnp.where(departing, 0.0, x_new)
-        times = jnp.where(departing, t_new, times)
-        ranks = jnp.where(departing, 0, ranks)
-        m = m - jnp.where(take_dep & has_active, 1, 0)
-        # Arrival: insert job i at its rank among the (post-departure)
-        # active set; ties break by index, matching size_ranks_desc.
-        i_c = jnp.minimum(i, M - 1)
-        x_a = xs[i_c]
-        still = ranks > 0
-        ahead = still & ((x_new > x_a) | ((x_new == x_a) & (idx < i_c)))
-        r_a = 1 + jnp.sum(ahead, dtype=jnp.int32)
-        bumped = jnp.where(still & (ranks >= r_a), ranks + 1, ranks)
-        inserted = bumped.at[i_c].set(r_a)
-        ranks = jnp.where(admit, inserted, ranks)
-        m = m + jnp.where(admit, 1, 0)
-        i = i + jnp.where(admit, 1, 0)
-        return (x_new, t_new, i, ranks, m, times), None
-
-    init = (
-        xs,
-        jnp.zeros((), dtype),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros(M, jnp.int32),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros(M, dtype),
+    times = engine.run_ranked(
+        x0, arrival_times, p, n_servers, rank_policy, horizon=horizon
     )
-    (x_fin, _, _, ranks_fin, _, times), _ = jax.lax.scan(
-        body, init, None, length=E
-    )
-    times = jnp.where((x_fin > 0) | (ranks_fin > 0), jnp.inf, times)
-    times = jnp.zeros(M, dtype).at[order].set(times)
-
-    flows = times - arrival_times
-    alone = x0 / speedup(jnp.asarray(n_servers, dtype), p)
-    slow = flows / alone
-    return OnlineSimResult(
-        completion_times=times,
-        flow_times=flows,
-        slowdowns=slow,
-        total_flowtime=jnp.sum(flows),
-        mean_flowtime=jnp.mean(flows),
-        mean_slowdown=jnp.mean(slow),
-        makespan=jnp.max(times),
-    )
+    return _finalize(x0, arrival_times, times, p, n_servers)
 
 
-# --------------------------------------------------------- arrival processes
-def poisson_arrivals(key: jax.Array, n_jobs: int, rate) -> jax.Array:
-    """Arrival epochs of a Poisson(rate) stream: cumsum of Exp(rate) gaps."""
-    gaps = jax.random.exponential(key, (n_jobs,)) / rate
-    return jnp.cumsum(gaps)
+def simulate_online_quantized(
+    x0: jax.Array,
+    arrival_times: jax.Array,
+    p: jax.Array,
+    n_chips: int,
+    policy: Policy,
+    *,
+    min_chips: int = 1,
+    rel_tol: float = 1e-9,
+    horizon: int | None = None,
+    record: bool = False,
+):
+    """Online simulation with whole-chip allocations (integer regime).
 
-
-def deterministic_arrivals(n_jobs: int, rate) -> jax.Array:
-    """Evenly spaced arrivals at interval 1/rate (first arrival at 1/rate)."""
-    return jnp.arange(1, n_jobs + 1) / rate
-
-
-def pareto_sizes(key: jax.Array, n_jobs: int, alpha: float = 1.5) -> jax.Array:
-    """Pareto(alpha) job sizes with minimum 1 — the benchmarks' heavy tail.
-
-    Matches ``numpy.random.Generator.pareto(alpha) + 1`` in distribution
-    (classical Pareto with x_m = 1).
+    Each event re-runs ``policy`` and rounds ``theta * n_chips`` to integer
+    chips by largest-remainder apportionment with a ``min_chips`` floor —
+    bit-for-bit the ``ClusterScheduler`` decision epoch, but inside the
+    engine's scan so thousands of seeds × loads sweep in one device call
+    (see ``benchmarks/quantized.py``).  With ``record=True`` returns
+    ``(OnlineSimResult, EngineResult)`` where the engine trace carries the
+    per-event chips/time/sizes trajectory (arrival-sorted job order).
     """
-    return jax.random.pareto(key, alpha, (n_jobs,))
+    x0 = jnp.asarray(x0)
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arrival_times = jnp.asarray(arrival_times).astype(dtype)
+    res = engine.run(
+        x0,
+        arrival_times,
+        p,
+        engine.quantized_rule(policy, n_chips, min_chips=min_chips, dtype=dtype),
+        horizon=horizon,
+        rel_tol=rel_tol,
+        record=record,
+    )
+    out = _finalize(x0, arrival_times, res.completion_times, p, n_chips)
+    return (out, res) if record else out
+
+
+def simulate_scenario(
+    scn: Scenario,
+    p,
+    n_servers,
+    policy: Policy,
+    *,
+    n_chips: int | None = None,
+    min_chips: int = 1,
+    rel_tol: float = 1e-9,
+    horizon: int | None = None,
+) -> OnlineSimResult:
+    """Run one drawn :class:`Scenario` through the engine.
+
+    Estimation noise (``scn.size_factors``/``scn.p_hat``) reaches only the
+    allocation rule; the dynamics use the true sizes and exponent.  Pass
+    ``n_chips`` for the quantized (whole-chips) regime, else the
+    continuously-divisible system with ``n_servers`` is simulated.
+    """
+    x0 = jnp.asarray(scn.x0)
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arrival_times = jnp.asarray(scn.arrival_times).astype(dtype)
+    factors = scn.size_factors
+    if factors is not None:
+        # The engine scans jobs in arrival order; permute to match.
+        factors = jnp.asarray(factors, dtype)[jnp.argsort(arrival_times)]
+    if n_chips is not None:
+        rule = engine.quantized_rule(
+            policy, n_chips, min_chips=min_chips, dtype=dtype,
+            size_factors=factors, p_hat=scn.p_hat,
+        )
+        n_alone = n_chips
+    else:
+        rule = engine.continuous_rule(
+            policy, n_servers, dtype=dtype,
+            size_factors=factors, p_hat=scn.p_hat,
+        )
+        n_alone = n_servers
+    res = engine.run(x0, arrival_times, p, rule, horizon=horizon, rel_tol=rel_tol)
+    return _finalize(x0, arrival_times, res.completion_times, p, n_alone)
 
 
 # --------------------------------------------------------------- load sweeps
@@ -288,16 +228,25 @@ def load_sweep(
     size_alpha: float = 1.5,
     seed: int = 0,
     metric: str = "mean_flowtime",
+    scenario: str = "poisson",
+    scenario_kw: dict | None = None,
+    n_chips: int | None = None,
+    min_chips: int = 1,
 ) -> dict:
     """Sweep arrival rates × seeds × policies in one device call per policy.
 
     Seeds are shared across rates and policies (paired comparison), so
     "heSRPT beats EQUI at every load" is tested on identical sample paths.
-    Returns ``{rate: {policy: mean-over-seeds of `metric`}}``.
+    ``scenario`` selects the workload generator from the registry
+    (``core/scenarios.py``); ``n_chips`` switches to the quantized
+    whole-chips engine.  Returns ``{rate: {policy: mean-over-seeds of
+    `metric`}}``.
     """
     per_seed = load_sweep_raw(
         policies, rates, n_jobs=n_jobs, n_seeds=n_seeds, p=p,
         n_servers=n_servers, size_alpha=size_alpha, seed=seed, metric=metric,
+        scenario=scenario, scenario_kw=scenario_kw, n_chips=n_chips,
+        min_chips=min_chips,
     )
     out = {}
     for ri, rate in enumerate(rates):
@@ -318,6 +267,10 @@ def load_sweep_raw(
     size_alpha: float = 1.5,
     seed: int = 0,
     metric: str = "mean_flowtime",
+    scenario: str = "poisson",
+    scenario_kw: dict | None = None,
+    n_chips: int | None = None,
+    min_chips: int = 1,
 ) -> dict:
     """Like ``load_sweep`` but returns the full ``[n_rates, n_seeds]`` array
     of per-seed metrics for each policy (for CIs, paired tests, plotting)."""
@@ -325,32 +278,44 @@ def load_sweep_raw(
         raise ValueError(f"unknown metric {metric!r}")
     keys = jax.random.split(jax.random.PRNGKey(seed), n_seeds)
     rates_arr = jnp.asarray(rates, dtype=jnp.result_type(float))
+    scn_kw = tuple(sorted((scenario_kw or {}).items()))
 
     out = {}
     for name in policies:
-        f = _sweep_fn(name, n_jobs, p, float(n_servers), size_alpha, metric)
+        f = _sweep_fn(name, n_jobs, p, float(n_servers), size_alpha, metric,
+                      scenario, scn_kw, n_chips, min_chips)
         out[name] = f(keys, rates_arr)  # [n_rates, n_seeds]
     return out
 
 
 @functools.lru_cache(maxsize=64)
-def _sweep_fn(name, n_jobs, p, n_servers, size_alpha, metric):
+def _sweep_fn(name, n_jobs, p, n_servers, size_alpha, metric, scenario,
+              scn_kw, n_chips, min_chips):
     """Persistent jitted sweep per parameter set, so repeat calls (and a
     warmup before timing) hit XLA's compilation cache instead of rebuilding
     a fresh ``jax.jit`` object each time."""
+    kw = dict(scn_kw)
+    sampler = make_scenario(scenario, size_alpha=size_alpha, p=p, **kw)
+    noisy = kw.get("sigma_size", 0.0) > 0 or kw.get("sigma_p", 0.0) > 0
     # Sort-free ranked scan where the policy allows it (heSRPT, EQUI,
     # SRPT — ~20x faster at M=1000); generic sort-per-event otherwise.
-    rank_pol = make_rank_policy(name)
-    pol = None if rank_pol else make_policy(name, n_servers=n_servers)
+    # Estimation noise and chip quantization both break the carried-rank
+    # invariants, so those paths stay generic.
+    rank_pol = make_rank_policy(name) if n_chips is None and not noisy else None
+    pol = None if rank_pol else make_policy(
+        name, n_servers=(n_chips if n_chips is not None else n_servers)
+    )
 
     def one(key, rate):
-        k1, k2 = jax.random.split(key)
-        arr = poisson_arrivals(k1, n_jobs, rate)
-        x0 = pareto_sizes(k2, n_jobs, size_alpha)
+        scn = sampler(key, n_jobs, rate)
         if rank_pol is not None:
-            res = simulate_online_ranked(x0, arr, p, n_servers, rank_pol)
+            res = simulate_online_ranked(
+                scn.x0, scn.arrival_times, p, n_servers, rank_pol
+            )
         else:
-            res = simulate_online(x0, arr, p, n_servers, pol)
+            res = simulate_scenario(
+                scn, p, n_servers, pol, n_chips=n_chips, min_chips=min_chips
+            )
         return getattr(res, metric)
 
     return jax.jit(jax.vmap(jax.vmap(one, in_axes=(0, None)),

@@ -1,0 +1,413 @@
+"""One scan-based allocation engine behind every simulator in the repo.
+
+Theorem 3 of the paper proves the optimal allocation is constant between
+decision epochs, so *every* fluid trajectory this repo simulates — batch
+(all jobs at t=0), online arrival streams, and the integer-chips cluster
+regime — is the same loop: query an allocation rule at an event, advance
+every job linearly, repeat.  This module is that loop, written once as a
+single ``jax.lax.scan`` and parameterized along two axes:
+
+- **Allocation rule** (``AllocRule``): maps the remaining sizes of the
+  *arrived, unfinished* jobs to ``(alloc, rate)`` per job.
+
+  * :func:`continuous_rule` — the paper's continuously-divisible system:
+    ``theta`` from any ``core/policies.py`` policy, rate ``s(theta_i N)``.
+    Optional size-estimation noise (the scheduler acts on perturbed sizes
+    ``x * size_factors`` and a perturbed exponent ``p_hat`` while the true
+    dynamics use ``x`` and ``p``).
+  * :func:`quantized_rule` — whole chips: ``theta`` is rounded to integer
+    chip counts by :func:`quantize_allocation_jax`, the vectorized-jnp port
+    of ``sched/quantize.py``'s largest-remainder apportionment with a
+    min-chips floor (the NumPy version remains the oracle it is
+    property-tested against).  Rate is ``s(chips_i) = chips_i ** p``.
+  * :func:`run_ranked` — the sort-free rank-space fast path for policies in
+    ``core.policies.RANK_POLICIES`` (heSRPT/EQUI/SRPT); it carries the
+    descending-size ranks through the scan instead of re-sorting per event.
+
+- **Scenario** (``core/scenarios.py``): where the jobs and arrival epochs
+  come from — batch, trace/Poisson, bursty MAP on-off streams, size
+  estimation noise — exposed through a small registry usable from the
+  benchmarks.
+
+``core/simulator.py`` (batch) and ``core/arrivals.py`` (online) are thin
+wrappers over :func:`run`; ``sched/cluster.py`` delegates its fluid advance
+and quantization here so integer-allocation sweeps run jit+vmap at
+``load_sweep`` scale instead of one Python event at a time.
+
+Everything is jit-able and vmap-able over seeds/loads/configs.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Callable
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flowtime import speedup
+from repro.core.policies import Policy
+
+# (x_active, p) -> (alloc, rate); ``alloc`` is theta for continuous rules
+# and integer chips for quantized rules, ``rate`` the per-job service rate.
+AllocRule = Callable[[jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+
+
+class EngineTrace(NamedTuple):
+    """Per-event trajectory (in arrival-sorted job order, see ``order``)."""
+
+    alloc: jax.Array  # [E, M] allocation chosen at each event (theta / chips)
+    times: jax.Array  # [E] event start times
+    sizes: jax.Array  # [E, M] remaining sizes at each event start
+
+
+class EngineResult(NamedTuple):
+    completion_times: jax.Array  # [M] absolute departure times, input order
+    x_final: jax.Array  # [M] remaining sizes at horizon, arrival-sorted order
+    order: jax.Array  # [M] arrival-sorted permutation used internally
+    trace: EngineTrace | None  # populated when ``record=True``
+
+
+# ----------------------------------------------------------- allocation rules
+def continuous_rule(
+    policy: Policy,
+    n_servers,
+    *,
+    dtype,
+    size_factors: jax.Array | None = None,
+    p_hat=None,
+) -> AllocRule:
+    """The paper's continuously-divisible allocation: ``rate = s(theta N)``.
+
+    ``size_factors``/``p_hat`` inject estimation error: the *policy* sees
+    ``x * size_factors`` and ``p_hat`` while the *dynamics* keep the true
+    ``x`` and ``p`` — the scheduler mis-ranks jobs, the physics don't lie.
+    NOTE: ``size_factors`` must be in arrival-sorted job order (the order
+    the engine's scan runs in).
+    """
+
+    def rule(x_act, p):
+        x_seen = x_act if size_factors is None else x_act * size_factors
+        p_seen = p if p_hat is None else p_hat
+        theta = policy(x_seen, p_seen).astype(dtype)
+        return theta, speedup(theta * n_servers, p)
+
+    return rule
+
+
+def quantized_rule(
+    policy: Policy,
+    n_chips: int,
+    *,
+    min_chips: int = 1,
+    dtype,
+    size_factors: jax.Array | None = None,
+    p_hat=None,
+) -> AllocRule:
+    """Whole-chips allocation: largest-remainder rounding of ``theta * N``.
+
+    This is ``sched/cluster.py``'s decision epoch — policy then quantize —
+    as a pure scan step, so the integer-allocation regime can be swept
+    jit+vmap instead of one Python event at a time.
+    """
+
+    def rule(x_act, p):
+        x_seen = x_act if size_factors is None else x_act * size_factors
+        p_seen = p if p_hat is None else p_hat
+        theta = policy(x_seen, p_seen).astype(dtype)
+        chips = quantize_allocation_jax(theta, n_chips, min_chips=min_chips)
+        return chips, speedup(chips.astype(dtype), p)
+
+    return rule
+
+
+# ------------------------------------------------------------ the event scan
+def run(
+    x0: jax.Array,
+    arrival_times: jax.Array,
+    p,
+    rule: AllocRule,
+    *,
+    pre_arrived: bool = False,
+    horizon: int | None = None,
+    rel_tol: float = 1e-9,
+    t0=0.0,
+    record: bool = False,
+) -> EngineResult:
+    """Run the event-driven fluid trajectory to completion in one scan.
+
+    Each step advances to the next event (``min`` of next departure and next
+    arrival), re-querying ``rule`` on the active set — the paper's Thm 3
+    epoch structure, with arrivals as the §4.3 heuristic.  An M-job stream
+    has at most ``2M`` events (``M`` with ``pre_arrived=True``, at least one
+    job departing per step for work-conserving rules), which bounds the scan
+    length; steps after the last event are no-ops.
+
+    ``pre_arrived=True`` marks every job as already present (the batch
+    case): ``arrival_times`` then only defines the job order and flow-time
+    zero points.  Jobs that never depart within the horizon report ``inf``.
+    ``record=True`` additionally returns the full per-event trajectory
+    (allocations, event times, remaining sizes) in arrival-sorted order.
+    """
+    x0 = jnp.asarray(x0)
+    M = x0.shape[0]
+    E = (M if pre_arrived else 2 * M) if horizon is None else horizon
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arrival_times = jnp.asarray(arrival_times).astype(dtype)
+    tol = rel_tol * jnp.max(x0)
+
+    # Event logic walks arrivals in time order; un-sort at the end.
+    order = jnp.argsort(arrival_times)
+    arr = arrival_times[order]
+    xs = x0[order]
+    idx = jnp.arange(M)
+    i0 = jnp.asarray(M if pre_arrived else 0, jnp.int32)
+
+    def body(carry, _):
+        x, t, i, times = carry
+        active = (idx < i) & (x > 0)
+        x_act = jnp.where(active, x, 0.0)
+        alloc, rate = rule(x_act, p)
+        tt = jnp.where(active & (rate > 0), x / rate, jnp.inf)
+        dt_dep = jnp.min(tt)  # inf when nothing is active
+        t_next_arr = jnp.where(i < M, arr[jnp.minimum(i, M - 1)], jnp.inf)
+        dt_arr = jnp.maximum(t_next_arr - t, 0.0)
+        dt = jnp.minimum(dt_dep, dt_arr)
+        any_event = jnp.isfinite(dt)
+        dt = jnp.where(any_event, dt, 0.0)
+        # Landing on an arrival pins t to the exact arrival time so the
+        # searchsorted admission below cannot miss it to float rounding.
+        admit = any_event & (dt_arr <= dt_dep)
+        t_new = jnp.where(admit, t_next_arr, t + dt)
+        x_new = jnp.where(active, x - dt * rate, x)
+        # The argmin job departs BY CONSTRUCTION when the departure is the
+        # next event; float residue (~eps*x) must not be allowed to keep it.
+        take_dep = any_event & (dt_dep <= dt_arr)
+        departing = (idx == jnp.argmin(tt)) & active & take_dep
+        x_new = jnp.where(departing | (active & (x_new <= tol)), 0.0, x_new)
+        newly_done = active & (x_new == 0.0)
+        times = jnp.where(newly_done, t_new, times)
+        i_new = jnp.searchsorted(arr, t_new, side="right").astype(i.dtype)
+        i_new = jnp.maximum(i, i_new)  # monotone even on no-op steps
+        out = (alloc, t, x) if record else None
+        return (x_new, t_new, i_new, times), out
+
+    init = (xs, jnp.asarray(t0, dtype), i0, jnp.zeros(M, dtype))
+    (x_fin, _, _, times), ys = jax.lax.scan(body, init, None, length=E)
+    # Safety: any job that never departed (pathological rule) -> inf.
+    times = jnp.where(x_fin > 0, jnp.inf, times)
+    times_in = jnp.zeros(M, dtype).at[order].set(times)  # back to input order
+    trace = EngineTrace(alloc=ys[0], times=ys[1], sizes=ys[2]) if record else None
+    return EngineResult(
+        completion_times=times_in, x_final=x_fin, order=order, trace=trace
+    )
+
+
+def run_ranked(
+    x0: jax.Array,
+    arrival_times: jax.Array,
+    p,
+    n_servers,
+    rank_policy,
+    *,
+    horizon: int | None = None,
+) -> jax.Array:
+    """Sort-free fast path of :func:`run` for rank-space policies.
+
+    ``rank_policy(ranks, m, p) -> theta`` must be a pure function of the
+    descending-size ranks (Thm 6 size-invariance), with rates non-increasing
+    in remaining size — true for heSRPT, EQUI and SRPT (see
+    ``core.policies.RANK_POLICIES``).  Those two properties give two
+    invariants this scan exploits:
+
+    - the size order of active jobs never changes between events, so the
+      rank vector can be *carried* and updated in O(M) per event (an arrival
+      inserts one rank, a departure removes the highest) instead of
+      re-sorted — XLA's per-step sort is what makes the generic path ~20x
+      slower at M=1000;
+    - the next departure is always the current-smallest active job (rank m),
+      so no argmin over per-job finish times is needed.
+
+    Admissions are one job per step, so the default ``2M`` horizon (M
+    arrivals + M departures) is exact.  Agreement with the generic path is
+    property-tested in tests/test_arrivals.py.
+
+    Tie handling: jobs with *exactly* equal remaining sizes get distinct
+    adjacent ranks (ties break by arrival order, as in
+    ``size_ranks_desc``).  For SRPT this serves tied jobs in the opposite
+    order to the generic path's ``argmin`` — per-job times permute within
+    the tied group, while totals/means are exchange-invariant.  Ties are
+    measure-zero for continuous size distributions.
+
+    Returns the per-job completion times in input order (``inf`` if never
+    departed).
+    """
+    x0 = jnp.asarray(x0)
+    M = x0.shape[0]
+    E = 2 * M if horizon is None else horizon
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arrival_times = jnp.asarray(arrival_times).astype(dtype)
+
+    order = jnp.argsort(arrival_times)  # one sort total, not one per event
+    arr = arrival_times[order]
+    xs = x0[order]
+    idx = jnp.arange(M)
+
+    def body(carry, _):
+        x, t, i, ranks, m, times = carry
+        theta = rank_policy(ranks, m, p, dtype=dtype)
+        rate = speedup(theta * n_servers, p)
+        # Next departure: the smallest active job, i.e. rank m, found by
+        # argmax since ranks are unique with maximum m (0 when inactive).
+        small = jnp.argmax(ranks)
+        has_active = m > 0
+        x_s = x[small]
+        r_s = rate[small]
+        dt_dep = jnp.where(has_active & (r_s > 0), x_s / r_s, jnp.inf)
+        t_next_arr = jnp.where(i < M, arr[jnp.minimum(i, M - 1)], jnp.inf)
+        dt_arr = jnp.maximum(t_next_arr - t, 0.0)
+        dt = jnp.minimum(dt_dep, dt_arr)
+        any_event = jnp.isfinite(dt)
+        dt = jnp.where(any_event, dt, 0.0)
+        admit = any_event & (dt_arr <= dt_dep)
+        take_dep = any_event & (dt_dep <= dt_arr)
+        t_new = jnp.where(admit, t_next_arr, t + dt)
+        active = ranks > 0
+        x_new = jnp.where(active, jnp.maximum(x - dt * rate, 0.0), x)
+        # Departure: drop rank m; every other active rank stays valid.
+        departing = (idx == small) & active & take_dep
+        x_new = jnp.where(departing, 0.0, x_new)
+        times = jnp.where(departing, t_new, times)
+        ranks = jnp.where(departing, 0, ranks)
+        m = m - jnp.where(take_dep & has_active, 1, 0)
+        # Arrival: insert job i at its rank among the (post-departure)
+        # active set; ties break by index, matching size_ranks_desc.
+        i_c = jnp.minimum(i, M - 1)
+        x_a = xs[i_c]
+        still = ranks > 0
+        ahead = still & ((x_new > x_a) | ((x_new == x_a) & (idx < i_c)))
+        r_a = 1 + jnp.sum(ahead, dtype=jnp.int32)
+        bumped = jnp.where(still & (ranks >= r_a), ranks + 1, ranks)
+        inserted = bumped.at[i_c].set(r_a)
+        ranks = jnp.where(admit, inserted, ranks)
+        m = m + jnp.where(admit, 1, 0)
+        i = i + jnp.where(admit, 1, 0)
+        return (x_new, t_new, i, ranks, m, times), None
+
+    init = (
+        xs,
+        jnp.zeros((), dtype),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros(M, jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros(M, dtype),
+    )
+    (x_fin, _, _, ranks_fin, _, times), _ = jax.lax.scan(
+        body, init, None, length=E
+    )
+    times = jnp.where((x_fin > 0) | (ranks_fin > 0), jnp.inf, times)
+    return jnp.zeros(M, dtype).at[order].set(times)
+
+
+# -------------------------------------------------- JAX-native quantization
+def _inv_rank(order: jax.Array) -> jax.Array:
+    """position of each element in its own argsort (the inverse permutation)."""
+    M = order.shape[0]
+    return (
+        jnp.zeros(M, jnp.int32).at[order].set(jnp.arange(M, dtype=jnp.int32))
+    )
+
+
+def quantize_allocation_jax(
+    theta: jax.Array, n_chips: int, *, min_chips: int = 1
+) -> jax.Array:
+    """Vectorized-jnp port of ``sched.quantize.quantize_allocation``.
+
+    Largest-remainder rounding of ``theta * n_chips`` (``theta`` sums to
+    ~1 over the active jobs, ``theta <= 0`` means inactive) with a
+    ``min_chips`` floor, matching the NumPy oracle *exactly* — including
+    its greedy trim order and stable tie-breaking — but with every
+    data-dependent loop replaced by sorts and a static-length binary
+    search, so it jit/vmaps inside the engine's scan:
+
+    - **Oversubscription** (more active jobs than ``n_chips // min_chips``
+      can hold): keep the largest-theta jobs, queue the rest at 0 chips,
+      renormalize.  The oracle recurses once; a single unrolled pass
+      suffices because the restriction can't oversubscribe again.
+    - **Min-chips overflow trim**: the oracle greedily decrements the job
+      maximizing ``base - raw``.  Candidate ``j``'s successive priorities
+      are ``-(frac_j + k)``, which fall in disjoint unit bands per trim
+      round ``k`` — so the greedy is exactly "full rounds + one partial
+      round in ascending-frac order".  The number of full rounds is found
+      by binary search on ``T(r) = sum_j min(cap_j, r)`` (monotone in
+      ``r``), ``ceil(log2(n_chips))`` iterations, each O(M).
+    - **Leftover distribution**: +1 chip to the largest fractional parts
+      (stable on ties), active jobs only.
+
+    ``n_chips``/``min_chips`` are static Python ints.  Returns int32 chips.
+    """
+    theta = jnp.asarray(theta)
+    M = theta.shape[0]
+    if n_chips <= 0 or min_chips <= 0 or M == 0:
+        return jnp.zeros(M, jnp.int32)
+    cap = n_chips // min_chips  # most jobs the floor allows us to serve
+
+    active0 = theta > 0
+    n_active = jnp.sum(active0, dtype=jnp.int32)
+    # Oversubscribed: serve the largest-theta jobs (stable on ties), queue
+    # the rest with 0, renormalize — the oracle's single recursion, unrolled.
+    desc = _inv_rank(jnp.argsort(jnp.where(active0, -theta, jnp.inf)))
+    servable = active0 & (desc < cap)
+    over = n_active * min_chips > n_chips
+    sub = jnp.where(servable, theta, 0.0)
+    tot = jnp.sum(sub)
+    theta_eff = jnp.where(over, jnp.where(tot > 0, sub / tot, 0.0), theta)
+    active = theta_eff > 0
+
+    raw = theta_eff * n_chips
+    fl = jnp.floor(raw)
+    frac = raw - fl
+    base = jnp.where(active, jnp.maximum(fl, min_chips), 0.0).astype(jnp.int32)
+
+    # Min-chips floor oversubscribed the pool: trim K chips from the
+    # largest holdings, exactly as the oracle's greedy (see docstring).
+    K = jnp.maximum(jnp.sum(base) - n_chips, 0)
+    capj = jnp.maximum(base - min_chips, 0) * (base > min_chips)
+
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        ge = jnp.sum(jnp.minimum(capj, mid)) >= K
+        return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
+
+    n_bits = (n_chips + 1).bit_length()
+    lo, _hi = jax.lax.fori_loop(
+        0, n_bits, bisect, (jnp.int32(0), jnp.int32(n_chips))
+    )
+    r_star = lo  # smallest r with T(r) >= K (0 when K == 0)
+    full = jnp.minimum(capj, jnp.maximum(r_star - 1, 0))
+    extra_needed = K - jnp.sum(full)
+    elig = capj >= jnp.maximum(r_star, 1)
+    erank = _inv_rank(jnp.argsort(jnp.where(elig, frac, jnp.inf)))
+    extra = (elig & (erank < extra_needed)).astype(jnp.int32)
+    base = base - full - extra
+
+    # Leftover chips (only when no trim happened): largest fracs first.
+    remainder = n_chips - jnp.sum(base)
+    frank = _inv_rank(jnp.argsort(jnp.where(active, -frac, jnp.inf)))
+    base = base + (active & (frank < remainder)).astype(jnp.int32)
+    return base
+
+
+__all__ = [
+    "AllocRule",
+    "EngineResult",
+    "EngineTrace",
+    "continuous_rule",
+    "quantize_allocation_jax",
+    "quantized_rule",
+    "run",
+    "run_ranked",
+]

@@ -18,7 +18,7 @@ Jobs With Known Sizes", 2019.
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

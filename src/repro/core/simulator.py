@@ -1,14 +1,11 @@
-"""Event-driven fluid simulator for allocation policies.
+"""Batch fluid simulator — a thin wrapper over ``core/engine.py``.
 
 Theorem 3 proves the optimal allocation is constant between departures, so a
-fluid trajectory is fully described by its M departure epochs.  The simulator
-exploits this: at each epoch it queries the policy once, advances every job
-linearly at rate ``s(theta_i N)`` until the next departure, and records the
-departure time.  This is *exact* for any policy that is constant between
-departures (all policies in ``core/policies.py`` are — they are deterministic
-functions of the remaining-size vector, which only changes order at
-departures... and for size-proportional policies like heLRPT the allocation is
-additionally constant *within* epochs by construction).
+fluid trajectory is fully described by its M departure epochs.  The engine
+exploits this; with every job pre-arrived at t=0 its event scan degenerates
+into exactly the batch epoch loop this module historically implemented (the
+``M``-step scan is bit-for-bit the old ``simulate``), and this wrapper only
+repackages the engine trajectory into the public :class:`SimResult`.
 
 Everything is a single ``jax.lax.scan`` -> jit-able, vmap-able over seeds.
 """
@@ -20,7 +17,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.flowtime import speedup
+from repro.core import engine
 from repro.core.policies import Policy
 
 
@@ -48,46 +45,27 @@ def simulate(
     departure are no-ops.  Simultaneous departures (e.g. heLRPT finishes all
     jobs at once) are handled by the relative tolerance ``rel_tol``.
     """
-    M = x0.shape[0]
     x0 = jnp.asarray(x0)
+    M = x0.shape[0]
     dtype = jnp.result_type(x0.dtype, jnp.float32)
-    x0 = x0.astype(dtype)
-    tol = rel_tol * jnp.max(x0)
-
-    def body(carry, _):
-        x, t, times = carry
-        active = x > 0
-        theta = policy(x, p).astype(dtype)
-        rate = speedup(theta * n_servers, p)
-        # Time to the next departure: min over active jobs with rate > 0.
-        tt = jnp.where(active & (rate > 0), x / rate, jnp.inf)
-        dt = jnp.min(tt)
-        any_active = jnp.isfinite(dt)
-        dt = jnp.where(any_active, dt, 0.0)  # all done -> no-op
-        t_new = t + dt
-        x_new = jnp.where(active, x - dt * rate, 0.0)
-        # The argmin job departs BY CONSTRUCTION; float rounding must not be
-        # allowed to keep it (fp32 residues ~eps*x would leak it) — zero it
-        # explicitly along with anything inside tolerance.
-        departing = (jnp.arange(M) == jnp.argmin(tt)) & active & any_active
-        x_new = jnp.where(departing | (x_new <= tol), 0.0, x_new)
-        newly_done = active & (x_new == 0.0) & any_active
-        times = jnp.where(newly_done, t_new, times)
-        return (x_new, t_new, times), (theta, t, x)
-
-    init = (x0, jnp.zeros((), dtype), jnp.zeros(M, dtype))
-    (x_fin, _, times), (theta_tr, t_tr, x_tr) = jax.lax.scan(
-        body, init, None, length=M
+    res = engine.run(
+        x0,
+        jnp.zeros(M, dtype),
+        p,
+        engine.continuous_rule(policy, n_servers, dtype=dtype),
+        pre_arrived=True,
+        horizon=M,
+        rel_tol=rel_tol,
+        record=True,
     )
-    # Safety: any job that never departed (pathological policy) -> inf.
-    times = jnp.where(x_fin > 0, jnp.inf, times)
+    times = res.completion_times
     return SimResult(
         completion_times=times,
         total_flowtime=jnp.sum(times),
         makespan=jnp.max(times),
-        theta_trace=theta_tr,
-        epoch_times=t_tr,
-        sizes_trace=x_tr,
+        theta_trace=res.trace.alloc,
+        epoch_times=res.trace.times,
+        sizes_trace=res.trace.sizes,
     )
 
 

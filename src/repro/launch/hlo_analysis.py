@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
 
 DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -44,7 +43,7 @@ _OP_RE = re.compile(
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
 
 
-def _array_shapes(shape_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+def _array_shapes(shape_str: str) -> list[tuple[str, tuple[int, ...]]]:
     out = []
     for m in _ARRAY_RE.finditer(shape_str):
         dims = tuple(int(d) for d in m.group(2).split(",") if d)
@@ -82,18 +81,18 @@ class Op:
 @dataclass
 class Computation:
     name: str
-    ops: List[Op] = field(default_factory=list)
-    shapes: Dict[str, str] = field(default_factory=dict)  # op name -> shape str
+    ops: list[Op] = field(default_factory=list)
+    shapes: dict[str, str] = field(default_factory=dict)  # op name -> shape str
 
 
 @dataclass
 class Totals:
     flops: float = 0.0
     bytes: float = 0.0
-    collective_bytes: Dict[str, float] = field(
+    collective_bytes: dict[str, float] = field(
         default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
     )
-    collective_counts: Dict[str, float] = field(
+    collective_counts: dict[str, float] = field(
         default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
     )
 
@@ -105,9 +104,9 @@ class Totals:
             self.collective_counts[k] += other.collective_counts[k] * mult
 
 
-def parse_computations(hlo: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
     entry_name = None
     for line in hlo.splitlines():
         hdr = _COMP_HDR_RE.match(line)
@@ -132,7 +131,7 @@ def parse_computations(hlo: str) -> Dict[str, Computation]:
     return comps
 
 
-def _called_comps(rest: str) -> List[str]:
+def _called_comps(rest: str) -> list[str]:
     """computation names referenced via calls=/to_apply=/condition=/body=."""
     out = []
     for key in ("calls=", "to_apply=", "condition=", "body="):
@@ -141,7 +140,7 @@ def _called_comps(rest: str) -> List[str]:
     return out
 
 
-def _operand_names(rest: str) -> List[str]:
+def _operand_names(rest: str) -> list[str]:
     """Names inside the top-level parens of 'opcode(...), attrs'."""
     depth, end = 1, len(rest)
     for i, ch in enumerate(rest):
@@ -157,7 +156,7 @@ def _operand_names(rest: str) -> List[str]:
 
 def _trip_count(cond: Computation) -> int:
     """Loop conditions compare the induction var against a constant bound."""
-    consts: Dict[str, int] = {}
+    consts: dict[str, int] = {}
     for op in cond.ops:
         if op.opcode == "constant":
             m = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
@@ -176,7 +175,7 @@ def _trip_count(cond: Computation) -> int:
 def _dot_flops(op: Op, comp: Computation) -> float:
     out_elems = sum(_prod(d) for _, d in _array_shapes(op.shape_str))
     operands = _operand_names(op.rest)
-    lhs_shape: Tuple[int, ...] = ()
+    lhs_shape: tuple[int, ...] = ()
     if operands and operands[0] in comp.shapes:
         arrs = _array_shapes(comp.shapes[operands[0]])
         if arrs:
@@ -227,16 +226,16 @@ _MEM_OPS = {
 _SLICE_OPS = ("dynamic-slice", "gather", "slice")
 
 
-def _sliced_param_bytes(sub: Computation) -> Dict[int, int]:
+def _sliced_param_bytes(sub: Computation) -> dict[int, int]:
     """For fusion params consumed ONLY by slicing ops, the bytes actually
     read: sum of the consumers' output sizes.  {param_index: bytes}."""
-    params: Dict[str, int] = {}
+    params: dict[str, int] = {}
     for op in sub.ops:
         if op.opcode == "parameter":
             m = re.search(r"parameter\((\d+)\)", op.name + " = parameter(" + op.rest)
             if m:
                 params[op.name] = int(m.group(1))
-    out: Dict[int, int] = {}
+    out: dict[int, int] = {}
     for pname, pidx in params.items():
         consumers = [
             o for o in sub.ops
@@ -248,7 +247,7 @@ def _sliced_param_bytes(sub: Computation) -> Dict[int, int]:
 
 
 def analyze_computation(
-    comp: Computation, comps: Dict[str, Computation], memo: Dict[str, Totals]
+    comp: Computation, comps: dict[str, Computation], memo: dict[str, Totals]
 ) -> Totals:
     if comp.name in memo:
         return memo[comp.name]
@@ -339,7 +338,7 @@ def analyze_hlo(hlo: str) -> dict:
     entry = comps.get("__entry__")
     if entry is None:
         raise ValueError("no ENTRY computation found")
-    memo: Dict[str, Totals] = {}
+    memo: dict[str, Totals] = {}
     t = analyze_computation(entry, comps, memo)
     return {
         "flops": t.flops,

@@ -26,7 +26,6 @@ import glob
 import json
 import os
 from dataclasses import dataclass
-from typing import Optional
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -61,11 +60,11 @@ class CellRoofline:
     hlo_flops_global: float
     useful_ratio: float
     roofline_fraction: float
-    temp_gb: Optional[float]
+    temp_gb: float | None
     note: str = ""
 
 
-def analyze_record(rec: dict) -> Optional[CellRoofline]:
+def analyze_record(rec: dict) -> CellRoofline | None:
     if rec.get("status") != "ok" or "hlo_analysis" not in rec:
         return None
     from repro.configs import SHAPE_BY_NAME, get_config
@@ -113,7 +112,7 @@ def suggest(dominant: str, rec: dict, useful_ratio: float) -> str:
     return "near compute roofline: overlap remaining collectives with compute"
 
 
-def load_cells(results_dir: str, tag: Optional[str] = None):
+def load_cells(results_dir: str, tag: str | None = None):
     cells, skips, errors = [], [], []
     for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
         with open(path) as f:
@@ -137,7 +136,7 @@ def fmt_s(x: float) -> str:
     return f"{x*1e3:6.1f}ms"
 
 
-def table(cells, *, mesh_filter: Optional[str] = None) -> str:
+def table(cells, *, mesh_filter: str | None = None) -> str:
     rows = [
         "| arch | shape | mesh | compute | memory | collective | bottleneck "
         "| MODEL/HLO | roofline frac | fits 16G |",

@@ -24,7 +24,7 @@ Baseline layout (hillclimbs adjust per EXPERIMENTS.md §Perf):
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -51,7 +51,7 @@ LOGICAL_CANDIDATES = {
 
 # (path regex, logical axes per dim).  First match wins; leaves are matched
 # on their '/'-joined tree path.  Missing rule -> fully replicated.
-PARAM_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+PARAM_RULES: tuple[tuple[str, tuple[str, ...]], ...] = (
     # embeddings / output head
     (r"(^|/)embed$", ("vocab", "embed")),
     (r"(^|/)lm_head$", ("vocab", "embed")),
@@ -87,19 +87,19 @@ PARAM_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
 )
 
 # MoE gate/up need 4 dims; the generic mlp rule above matches dense first.
-MOE_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+MOE_RULES: tuple[tuple[str, tuple[str, ...]], ...] = (
     (r"mlp/(gate|up)$", ("layers", "experts", "embed", "ff")),
     (r"mlp/down$", ("layers", "experts", "ff", "embed")),
 )
 
-BATCH_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+BATCH_RULES: tuple[tuple[str, tuple[str, ...]], ...] = (
     (r"^(tokens|labels)$", ("batch", "seq")),
     (r"^patch_embeds$", ("batch", "seq", "embed")),
     (r"^frames$", ("batch", "seq", "embed")),
     (r"^cache_length$", ()),
 )
 
-CACHE_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+CACHE_RULES: tuple[tuple[str, tuple[str, ...]], ...] = (
     (r"/(k|v)$", ("layers", "batch", "kv_heads", "cache_seq", "head_dim")),
     (r"/conv$", ("layers", "batch", "conv", "ff")),
     (r"/ssm$", ("layers", "batch", "none", "head_dim", "state")),
@@ -126,7 +126,7 @@ def spec_for(shape: Sequence[int], logical: Sequence[str], mesh) -> P:
     logical = tuple(logical)[:ndim] + ("none",) * max(0, ndim - len(logical))
     used: set = set()
     out = []
-    for dim, name in zip(shape, logical):
+    for dim, name in zip(shape, logical, strict=True):
         placed = None
         for cand in LOGICAL_CANDIDATES.get(name, ()):
             axes = _mesh_axes_of(cand)
@@ -151,7 +151,7 @@ def spec_for(shape: Sequence[int], logical: Sequence[str], mesh) -> P:
     return P(*out)
 
 
-def _match(path: str, rules) -> Optional[Tuple[str, ...]]:
+def _match(path: str, rules) -> tuple[str, ...] | None:
     for pat, logical in rules:
         if re.search(pat, path):
             return logical

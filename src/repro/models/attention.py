@@ -13,7 +13,6 @@ re-rotation.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -79,11 +78,11 @@ def apply_attn(
     causal: bool = True,
     use_rope: bool = True,
     impl: str = "auto",
-    cache: Optional[dict] = None,
+    cache: dict | None = None,
     cache_length=None,  # int32 scalar: tokens already in the cache
     return_cache: bool = False,
     cross: bool = False,
-    kv_source: Optional[jax.Array] = None,  # encoder output for cross-attn
+    kv_source: jax.Array | None = None,  # encoder output for cross-attn
 ):
     """Returns ``out [B, S, D]`` (and the new cache when ``return_cache``).
 

@@ -2,8 +2,8 @@
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec
@@ -16,7 +16,7 @@ class ParallelConfig:
     mesh; ``model_axis`` is the tensor-parallel axis."""
 
     mesh: Any  # jax.sharding.Mesh (unhashable; never a jit static arg)
-    data_axes: Tuple[str, ...] = ("data",)
+    data_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
 
 
@@ -29,7 +29,7 @@ class ModelOptions:
     moe_impl: str = "dense"  # dense | ragged | ragged_local
     remat: str = "full"  # full | none (activation checkpointing per block)
     activation_dtype: str = "bfloat16"
-    parallel: Optional[ParallelConfig] = None
+    parallel: ParallelConfig | None = None
     # Sequence parallelism at block boundaries: activations (and hence the
     # per-layer tensors remat saves for backward) are sharded over the model
     # axis on the seq dim.  Cuts saved-activation memory by the TP degree at
@@ -37,7 +37,7 @@ class ModelOptions:
     seq_shard: bool = False
 
 
-def constrain_seq(x, parallel: Optional[ParallelConfig]):
+def constrain_seq(x, parallel: ParallelConfig | None):
     """Shard [B, S, ...] activations: batch over data axes, seq over model."""
     if parallel is None or x.ndim < 2:
         return x
@@ -55,7 +55,7 @@ def constrain_seq(x, parallel: Optional[ParallelConfig]):
     )
 
 
-def constrain_batch(x, parallel: Optional[ParallelConfig]):
+def constrain_batch(x, parallel: ParallelConfig | None):
     """Pin an activation's leading (batch) dim to the data axes.  GSPMD
     propagation occasionally drops batch sharding across gathers/reshapes
     (observed: the embedding gather) — one constraint per block boundary

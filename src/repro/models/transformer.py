@@ -16,19 +16,16 @@ stacked outputs.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import apply_attn, cache_capacity
+from repro.models.attention import apply_attn, attn_init, cache_capacity
 from repro.models.common import ModelOptions, constrain_batch, constrain_seq
 from repro.models.layers import rms_norm, split_tree, swiglu, swiglu_init
 from repro.models.moe import moe_apply, moe_init
-from repro.models.rglru import RG_CONV, rg_apply, rg_cache_shape, rg_init
+from repro.models.rglru import rg_apply, rg_cache_shape, rg_init
 from repro.models.ssm import ssm_apply, ssm_cache_shape, ssm_init
-from repro.models.attention import attn_init
 
 
 def pattern_of(cfg) -> tuple:

@@ -8,15 +8,22 @@ extensions, flagged as the paper's §4.3 heuristic), recomputes:
     theta = policy(remaining_sizes, p)        # heSRPT / heLRPT / SRPT / ...
     chips = quantize(theta, N)                # largest-remainder (+ slices)
 
-``advance_fluid`` runs the fluid model for simulation/benchmarks;
-``sched/elastic.py`` instead drives real training jobs and reports progress
-back through ``report_progress``.
+``run_fluid_to_completion`` delegates the whole fluid trajectory to the
+scan-based allocation engine (``core/engine.py``) whenever the instance fits
+the engine's pure-function model — one jit'd device call instead of one
+Python epoch at a time, with the same integer-chips quantization
+(``core.engine.quantize_allocation_jax``, property-tested against the NumPy
+``sched/quantize.py`` oracle used by the per-event path).  The per-event
+Python path (``allocations`` / ``advance_fluid``) remains both the oracle
+the engine is cross-checked against and the fallback for stateful features
+(speedup estimators, slice snapping, per-job p, per-epoch KNEE alpha);
+``sched/elastic.py`` uses it to drive real training jobs through
+``report_progress``.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -33,7 +40,7 @@ class Job:
     remaining: float = -1.0
     arrival_time: float = 0.0
     chips: float = 0  # whole chips normally; fractional when quantize=False
-    completion_time: Optional[float] = None
+    completion_time: float | None = None
     estimator: SpeedupEstimator = field(default_factory=SpeedupEstimator)
 
     def __post_init__(self):
@@ -52,6 +59,7 @@ class ClusterScheduler:
         snap_slices: bool = False,
         use_estimator: bool = False,
         quantize: bool = True,
+        rel_tol: float = 1e-9,
     ):
         self.n_chips = n_chips
         self.policy_name = policy
@@ -62,9 +70,12 @@ class ClusterScheduler:
         # (fractional chips) — the fluid reference that core/arrivals.py is
         # cross-checked against.
         self.quantize = quantize
-        self.jobs: Dict[str, Job] = {}
+        # Same role as the engine's rel_tol: a departure must not be kept
+        # alive by float residue (~eps * size) from the linear advance.
+        self.rel_tol = rel_tol
+        self.jobs: dict[str, Job] = {}
         self.time = 0.0
-        self.events: List[dict] = []
+        self.events: list[dict] = []
 
     # ------------------------------------------------------------- job table
     def add_job(self, job: Job) -> None:
@@ -72,7 +83,7 @@ class ClusterScheduler:
         self.jobs[job.job_id] = job
         self.events.append({"t": self.time, "event": "arrival", "job": job.job_id})
 
-    def active_jobs(self) -> List[Job]:
+    def active_jobs(self) -> list[Job]:
         return [j for j in self.jobs.values() if j.remaining > 0]
 
     def effective_p(self) -> float:
@@ -84,7 +95,7 @@ class ClusterScheduler:
         return float(np.mean([j.p for j in act]))
 
     # ------------------------------------------------------ decision epochs
-    def allocations(self) -> Dict[str, float]:
+    def allocations(self) -> dict[str, float]:
         """Recompute theta -> chips for the current active set (int-valued
         when quantizing, fractional chips when ``quantize=False``)."""
         import jax.numpy as jnp
@@ -108,7 +119,7 @@ class ClusterScheduler:
         else:
             chips = [float(c) for c in theta * self.n_chips]
         out = {}
-        for j, c in zip(act, chips):
+        for j, c in zip(act, chips, strict=True):
             j.chips = c
             out[j.job_id] = c
         self.events.append(
@@ -145,23 +156,106 @@ class ClusterScheduler:
             step = dt
         if not np.isfinite(step):
             raise RuntimeError("no job can make progress (all rates zero)")
+        # Float residue (rem - (rem/rate)*rate can land ~eps above zero)
+        # must not keep the departing job alive for a micro-epoch — same
+        # relative-tolerance clamp as the engine scan.
+        tol = self.rel_tol * max(j.size for j in self.jobs.values())
         self.time += step
-        for j, r in zip(act, rates):
+        for j, r in zip(act, rates, strict=True):
             j.remaining = max(j.remaining - step * r, 0.0)
+            if j.remaining <= tol:
+                j.remaining = 0.0
             if j.remaining == 0 and j.completion_time is None:
                 j.completion_time = self.time
                 self.events.append({"t": self.time, "event": "depart", "job": j.job_id})
         return step
 
-    def run_fluid_to_completion(self) -> dict:
-        """Epoch loop: allocate -> advance to next departure -> repeat."""
-        guard = 0
-        while self.active_jobs():
-            self.allocations()
-            self.advance_fluid(until_departure=True)
-            guard += 1
-            if guard > 10 * len(self.jobs) + 100:
-                raise RuntimeError("scheduler failed to converge")
+    def _engine_eligible(self) -> bool:
+        """The engine models a pure (x, p) -> allocation rule: uniform p,
+        no online estimator state, no slice snapping, no per-epoch KNEE
+        alpha refitting.  It also needs float64 JAX (else the trajectory
+        would silently drop to f32 and near-tie chip decisions could flip
+        vs the f64 NumPy oracle path) — callers without ``jax_enable_x64``
+        get the Python loop."""
+        import jax
+
+        act = self.active_jobs()
+        return (
+            jax.config.jax_enable_x64
+            and not self.use_estimator
+            and not self.snap_slices
+            and self.policy_name.lower() != "knee"
+            and len({j.p for j in act}) <= 1
+        )
+
+    def _run_fluid_engine(self) -> dict:
+        """One device call for the whole trajectory: delegate the epoch loop
+        (allocate -> advance -> repeat) to ``core.engine.run`` with the
+        quantized (or continuous) allocation rule."""
+        import jax.numpy as jnp
+
+        from repro.core import engine as _engine
+
+        act = self.active_jobs()
+        ids = [j.job_id for j in act]
+        x0 = jnp.asarray([j.remaining for j in act])
+        dtype = jnp.result_type(x0.dtype, jnp.float32)
+        p = self.effective_p()
+        pol = make_policy(self.policy_name, n_servers=float(self.n_chips))
+        if self.quantize:
+            rule = _engine.quantized_rule(
+                pol, self.n_chips, min_chips=self.min_chips, dtype=dtype
+            )
+        else:
+            rule = _engine.continuous_rule(pol, float(self.n_chips), dtype=dtype)
+        res = _engine.run(
+            x0,
+            jnp.zeros(len(act), dtype),
+            p,
+            rule,
+            pre_arrived=True,
+            horizon=len(act),
+            rel_tol=self.rel_tol,
+            t0=self.time,
+            record=True,
+        )
+        times = np.asarray(res.completion_times, dtype=np.float64)
+        if not np.all(np.isfinite(times)):
+            raise RuntimeError("scheduler failed to converge (engine)")
+        # Replay the trajectory into the event log / job table the Python
+        # path would have produced (engine trace order == `act` order here:
+        # every job is pre-arrived, so the engine's arrival sort is the
+        # identity permutation).
+        alloc = np.asarray(res.trace.alloc)
+        sizes = np.asarray(res.trace.sizes)
+        t_ev = np.asarray(res.trace.times)
+        last_chips: dict[str, float] = {}
+        for e in range(alloc.shape[0]):
+            live = sizes[e] > 0
+            if not live.any():
+                break
+            # Continuous mode records theta in the trace; the event log keeps
+            # the Python path's unit (fractional *chips*, i.e. theta * N).
+            chips = {
+                ids[i]: (int(alloc[e, i]) if self.quantize
+                         else float(alloc[e, i]) * self.n_chips)
+                for i in range(len(ids))
+                if live[i]
+            }
+            last_chips.update(chips)
+            self.events.append(
+                {"t": float(t_ev[e]), "event": "allocate", "chips": chips, "p": p}
+            )
+        for i, j in enumerate(act):
+            j.remaining = 0.0
+            j.chips = last_chips.get(j.job_id, 0)
+            j.completion_time = float(times[i])
+        for t, jid in sorted((float(times[i]), ids[i]) for i in range(len(ids))):
+            self.events.append({"t": t, "event": "depart", "job": jid})
+        self.time = float(np.max(times))
+        return self._summary()
+
+    def _summary(self) -> dict:
         times = {j.job_id: j.completion_time for j in self.jobs.values()}
         flows = {
             jid: t - self.jobs[jid].arrival_time for jid, t in times.items()
@@ -172,3 +266,22 @@ class ClusterScheduler:
             "mean_flow_time": float(np.mean(list(flows.values()))),
             "makespan": float(max(times.values())),
         }
+
+    def run_fluid_to_completion(self, *, use_engine: bool = True) -> dict:
+        """Run the current job table to completion in the fluid model.
+
+        Delegates to the scan engine when eligible (one jit'd device call);
+        ``use_engine=False`` forces the per-event Python epoch loop
+        (allocate -> advance to next departure -> repeat), which is the
+        oracle the engine path is tested against event-for-event.
+        """
+        if use_engine and self.active_jobs() and self._engine_eligible():
+            return self._run_fluid_engine()
+        guard = 0
+        while self.active_jobs():
+            self.allocations()
+            self.advance_fluid(until_departure=True)
+            guard += 1
+            if guard > 10 * len(self.jobs) + 100:
+                raise RuntimeError("scheduler failed to converge")
+        return self._summary()

@@ -21,8 +21,6 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from functools import partial
-from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +45,7 @@ class ElasticJobConfig:
     batch_per_chip: int = 2
     p: float = 0.7  # speedup exponent handed to the scheduler
     lr: float = 1e-3
-    compression: Optional[str] = None  # None | int8 | topk
+    compression: str | None = None  # None | int8 | topk
     seed: int = 0
 
 
@@ -68,9 +66,9 @@ class ElasticJob:
             "err": init_error_state(params),
         }
         self.steps_done = 0
-        self.losses: List[float] = []
+        self.losses: list[float] = []
         self.resizes = 0
-        self.mesh: Optional[Mesh] = None
+        self.mesh: Mesh | None = None
         self.devices: tuple = ()
         self._step_fn = None
 
@@ -128,7 +126,7 @@ class ElasticJob:
             family=self.cfg.model_cfg.family,
             model_cfg=self.cfg.model_cfg,
         )
-        for i in range(n):
+        for _ in range(n):
             batch = {
                 k: jnp.asarray(v) for k, v in stream.batch(self.steps_done).items()
             }
@@ -150,23 +148,23 @@ class ElasticClusterDriver:
 
     def __init__(
         self,
-        job_cfgs: List[ElasticJobConfig],
+        job_cfgs: list[ElasticJobConfig],
         devices,
         *,
         policy: str = "hesrpt",
         ckpt_root: str = "/tmp/repro_elastic",
-        straggler_detector: Optional[StragglerDetector] = None,
+        straggler_detector: StragglerDetector | None = None,
     ):
         self.devices = list(devices)
         self.scheduler = ClusterScheduler(len(self.devices), policy=policy)
-        self.jobs: Dict[str, ElasticJob] = {}
+        self.jobs: dict[str, ElasticJob] = {}
         for jc in job_cfgs:
             self.jobs[jc.job_id] = ElasticJob(jc, ckpt_root)
             self.scheduler.add_job(
                 Job(jc.job_id, size=float(jc.total_steps), p=jc.p)
             )
         self.detector = straggler_detector
-        self.allocation_log: List[dict] = []
+        self.allocation_log: list[dict] = []
 
     def run(self, max_epochs: int = 100) -> dict:
         sched = self.scheduler

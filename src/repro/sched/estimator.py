@@ -14,7 +14,6 @@ heterogeneous jobs, DESIGN.md §9).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Tuple
 
 import numpy as np
 
@@ -26,7 +25,7 @@ class SpeedupEstimator:
     prior_p: float = 0.7
     prior_weight: float = 1.0
     discount: float = 1.0  # 1.0 = no forgetting
-    history: List[Tuple[float, float, float]] = field(default_factory=list)
+    history: list[tuple[float, float, float]] = field(default_factory=list)
     # entries: (log k, log T, weight)
 
     def observe(self, chips: float, throughput: float) -> None:

@@ -6,11 +6,17 @@ mesh slices).  ``quantize_allocation`` is largest-remainder apportionment with
 a minimum-chips floor; ``snap_to_slices`` optionally restricts every job to
 ICI-friendly slice sizes {1, 2, 4, 8, ...}.
 
-Invariants (property-tested):
+Invariants (property-tested in tests/test_quantize.py, which also checks
+exact agreement with the vectorized-jnp port
+``core.engine.quantize_allocation_jax`` — this NumPy version is the oracle):
 - conservation: sum(chips) == n_chips when every active job can hold >= min
   chips (else the smallest-theta jobs are queued with 0),
-- monotone: chips_i is within 1 (or one slice) of theta_i * n_chips,
+- monotone: chips_i is within 1 (or one slice) of theta_i * n_chips
+  whenever the min-chips floor does not bind,
 - active jobs with theta > 0 get >= min_chips whenever capacity allows.
+
+All sorts are stable so tie-breaking (by job index) is well-defined and
+reproducible by the jnp port; chips are only ever granted to active jobs.
 """
 
 from __future__ import annotations
@@ -31,7 +37,7 @@ def quantize_allocation(
 
     if n_active * min_chips > n_chips:
         # Oversubscribed: serve the largest-theta jobs, queue the rest.
-        order = np.argsort(-theta)
+        order = np.argsort(-theta, kind="stable")
         servable = order[: n_chips // min_chips]
         sub = np.zeros_like(theta)
         sub[servable] = theta[servable]
@@ -53,9 +59,11 @@ def quantize_allocation(
     remainder = n_chips - int(base.sum())
     if remainder > 0:
         frac = np.where(active, raw - np.floor(raw), -1.0)
-        # Give the leftover chips to the largest fractional parts.
-        order = np.argsort(-frac)
-        for j in order[:remainder]:
+        # Give the leftover chips to the largest fractional parts (active
+        # jobs only — a theta summing well below 1 must not leak chips to
+        # departed jobs).
+        order = np.argsort(-frac, kind="stable")
+        for j in order[: min(remainder, n_active)]:
             base[j] += 1
     return base
 

@@ -12,15 +12,14 @@ all-pairs timing gossip — it needs no extra communication.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
 
 
 @dataclass
 class StragglerDetector:
     threshold: float = 0.7
     patience: int = 3
-    slow_counts: Dict[str, int] = field(default_factory=dict)
-    events: List[dict] = field(default_factory=list)
+    slow_counts: dict[str, int] = field(default_factory=dict)
+    events: list[dict] = field(default_factory=list)
 
     def report(self, job_id: str, observed_rate: float, expected_rate: float,
                step: int = -1) -> bool:

@@ -15,7 +15,6 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -30,7 +29,7 @@ def _flatten(tree) -> dict:
     return out
 
 
-def save(path: str, tree, *, step: int = 0, extra: Optional[dict] = None) -> None:
+def save(path: str, tree, *, step: int = 0, extra: dict | None = None) -> None:
     os.makedirs(path, exist_ok=True)
     arrays = _flatten(tree)
     manifest = {
@@ -65,7 +64,7 @@ def restore(path: str, target_tree, shardings=None):
         treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(flat)
     )
     leaves = []
-    for (path_keys, leaf), sh in zip(flat, shard_flat):
+    for (path_keys, leaf), sh in zip(flat, shard_flat, strict=True):
         key = "/".join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys
         )

@@ -21,7 +21,6 @@ place compression can actually intercept the collective.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +57,7 @@ def compress_psum_int8(grads, err, axis_name: str):
 
     flat, treedef = jax.tree.flatten(grads)
     eflat = treedef.flatten_up_to(err)
-    out = [leaf(g, e) for g, e in zip(flat, eflat)]
+    out = [leaf(g, e) for g, e in zip(flat, eflat, strict=True)]
     return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
         [o[1] for o in out]
     )
@@ -83,7 +82,7 @@ def compress_psum_topk(grads, err, axis_name: str, k_frac: float = 0.1):
 
     flat, treedef = jax.tree.flatten(grads)
     eflat = treedef.flatten_up_to(err)
-    out = [leaf(g, e) for g, e in zip(flat, eflat)]
+    out = [leaf(g, e) for g, e in zip(flat, eflat, strict=True)]
     return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
         [o[1] for o in out]
     )
@@ -94,7 +93,7 @@ def plain_psum(grads, axis_name: str):
     return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads)
 
 
-def make_grad_reducer(scheme: Optional[str], axis_name: str, k_frac: float = 0.1):
+def make_grad_reducer(scheme: str | None, axis_name: str, k_frac: float = 0.1):
     """Returns reduce(grads, err) -> (mean_grads, new_err)."""
     if scheme is None or scheme == "none":
         return lambda g, e: (plain_psum(g, axis_name), e)

@@ -15,8 +15,8 @@ detection lives in ``sched/stragglers.py`` (it needs the speedup model).
 from __future__ import annotations
 
 import time
+from collections.abc import Callable
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
 
 import jax
 
@@ -28,12 +28,12 @@ class Heartbeat:
     """Last-seen timestamps per worker id."""
 
     timeout_s: float = 30.0
-    last_seen: Dict[int, float] = field(default_factory=dict)
+    last_seen: dict[int, float] = field(default_factory=dict)
 
-    def beat(self, worker: int, now: Optional[float] = None) -> None:
+    def beat(self, worker: int, now: float | None = None) -> None:
         self.last_seen[worker] = time.monotonic() if now is None else now
 
-    def dead_workers(self, now: Optional[float] = None) -> list:
+    def dead_workers(self, now: float | None = None) -> list:
         now = time.monotonic() if now is None else now
         return [w for w, t in self.last_seen.items() if now - t > self.timeout_s]
 
@@ -62,9 +62,9 @@ def run_with_recovery(
     n_steps: int,
     ckpt_dir: str,
     ckpt_every: int = 10,
-    injector: Optional[FailureInjector] = None,
+    injector: FailureInjector | None = None,
     shardings=None,
-    on_metrics: Optional[Callable] = None,
+    on_metrics: Callable | None = None,
 ):
     """Train for ``n_steps`` surviving failures.  Returns (params, opt_state,
     history) where history records losses and recovery events."""

@@ -106,7 +106,7 @@ def apply_updates(params, grads, opt_state, cfg: OptimizerConfig):
     flat_v = treedef.flatten_up_to(opt_state["v"])
     out = [
         upd(p, pm.astype(jnp.float32), g, m, v)
-        for p, pm, g, m, v in zip(flat_p, flat_pm, flat_g, flat_m, flat_v)
+        for p, pm, g, m, v in zip(flat_p, flat_pm, flat_g, flat_m, flat_v, strict=True)
     ]
     new_params = treedef.unflatten([o[0] for o in out])
     new_opt = {

@@ -2,7 +2,6 @@
 locks the device count at first init, so the main test process — which other
 tests need at 1 device — can never host these)."""
 
-import json
 import os
 import subprocess
 import sys

@@ -53,7 +53,7 @@ def test_smoke_forward_and_train_step(arch):
     # params actually changed
     delta = sum(
         float(jnp.sum(jnp.abs(a - b)))
-        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2), strict=True)
     )
     assert delta > 0, f"{arch}: train step did not update params"
 

@@ -1,7 +1,6 @@
 """Property-based tests (hypothesis) for the paper's structural claims and
 the scheduler's invariants."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

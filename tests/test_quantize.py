@@ -1,0 +1,164 @@
+"""Property tests for chip quantization: the NumPy oracle's invariants and
+exact agreement between ``core.engine.quantize_allocation_jax`` (the
+vectorized scan-friendly port) and ``sched.quantize.quantize_allocation``
+(the oracle) across random theta / n_chips / min_chips.
+
+Exactness strategy: the main largest-remainder path is purely elementwise
+(identical fp ops in NumPy and jnp), so random float thetas agree exactly.
+The oversubscribed branch renormalizes by an internal *sum*, whose
+summation order could differ between backends — the dyadic strategy below
+draws theta as ``w / 2**k`` (exactly representable, exactly summable), so
+even that branch admits no rounding slack and ties are exercised on
+purpose (equal weights), pinning the stable tie-break order.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import quantize_allocation_jax
+from repro.sched.quantize import quantize_allocation
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')"
+)
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+# A no-hypothesis seeded-fuzz fallback of the exact-agreement property lives
+# in tests/test_engine.py (this module is skipped wholesale without
+# hypothesis, matching tests/test_properties.py).
+
+
+@st.composite
+def float_thetas(draw):
+    m = draw(st.integers(1, 24))
+    w = np.array(draw(st.lists(
+        st.floats(0.0, 1e3, allow_nan=False, allow_infinity=False),
+        min_size=m, max_size=m,
+    )))
+    zero = np.array(draw(st.lists(st.booleans(), min_size=m, max_size=m)))
+    w = np.where(zero, 0.0, w)
+    s = w.sum()
+    return w / s if s > 0 else w
+
+
+@st.composite
+def dyadic_thetas(draw):
+    """theta = w / 2**k: exactly representable and exactly summable, with
+    deliberate ties (repeated weights)."""
+    m = draw(st.integers(1, 16))
+    w = np.array(draw(st.lists(st.integers(0, 64), min_size=m, max_size=m)),
+                 dtype=np.float64)
+    tot = int(w.sum())
+    if tot == 0:
+        return w
+    scale = 1 << (tot - 1).bit_length()  # next power of two >= sum
+    return w / scale
+
+
+chip_counts = st.integers(1, 300)
+min_chip_counts = st.integers(1, 5)
+
+
+@settings(max_examples=150, deadline=None)
+@given(theta=float_thetas(), n_chips=chip_counts, min_chips=min_chip_counts)
+def test_jax_quantizer_matches_numpy_oracle_floats(theta, n_chips, min_chips):
+    ref = quantize_allocation(theta, n_chips, min_chips=min_chips)
+    got = np.asarray(
+        quantize_allocation_jax(jnp.asarray(theta), n_chips, min_chips=min_chips)
+    )
+    np.testing.assert_array_equal(got.astype(np.int64), ref)
+
+
+@settings(max_examples=150, deadline=None)
+@given(theta=dyadic_thetas(), n_chips=st.integers(1, 64),
+       min_chips=st.integers(1, 4))
+def test_jax_quantizer_matches_numpy_oracle_dyadic_ties(
+    theta, n_chips, min_chips
+):
+    ref = quantize_allocation(theta, n_chips, min_chips=min_chips)
+    got = np.asarray(
+        quantize_allocation_jax(jnp.asarray(theta), n_chips, min_chips=min_chips)
+    )
+    np.testing.assert_array_equal(got.astype(np.int64), ref)
+
+
+@settings(max_examples=150, deadline=None)
+@given(theta=float_thetas(), n_chips=chip_counts, min_chips=min_chip_counts)
+def test_conservation(theta, n_chips, min_chips):
+    """sum(chips) == n_chips whenever any job is active and the floor is
+    satisfiable for at least one job; never more than n_chips."""
+    chips = quantize_allocation(theta, n_chips, min_chips=min_chips)
+    n_active = int((theta > 0).sum())
+    assert chips.sum() <= n_chips
+    if n_active == 0 or n_chips < min_chips:
+        assert chips.sum() == 0
+    else:
+        assert chips.sum() == n_chips
+
+
+@settings(max_examples=150, deadline=None)
+@given(theta=float_thetas(), n_chips=chip_counts, min_chips=min_chip_counts)
+def test_min_chips_floor(theta, n_chips, min_chips):
+    """Served jobs get >= min_chips; inactive jobs get nothing; when
+    capacity allows (no oversubscription) *every* active job is served."""
+    chips = quantize_allocation(theta, n_chips, min_chips=min_chips)
+    active = theta > 0
+    assert np.all(chips[~active] == 0)
+    served = chips > 0
+    assert np.all(chips[served] >= min_chips)
+    if int(active.sum()) * min_chips <= n_chips:
+        assert np.all(served[active])
+
+
+@settings(max_examples=200, deadline=None)
+@given(theta=float_thetas(), n_chips=chip_counts, min_chips=min_chip_counts)
+def test_within_one_of_raw_when_floor_does_not_bind(theta, n_chips, min_chips):
+    """Largest-remainder property: |chips - theta * n_chips| <= 1 for every
+    job the min-chips floor did not touch, provided the floor forced no
+    overflow trim and the pool was not oversubscribed."""
+    active = theta > 0
+    n_active = int(active.sum())
+    if n_active == 0 or n_active * min_chips > n_chips:
+        return  # oversubscribed: within-1 is vacuous (jobs are queued at 0)
+    raw = theta * n_chips
+    base0 = np.where(active, np.maximum(np.floor(raw), min_chips), 0)
+    if base0.sum() > n_chips:
+        return  # floor bound -> trim may move a job far from raw (documented)
+    chips = quantize_allocation(theta, n_chips, min_chips=min_chips)
+    unfloored = active & (np.floor(raw) >= min_chips)
+    assert np.all(np.abs(chips[unfloored] - raw[unfloored]) <= 1.0)
+    assert np.all(chips[active & ~unfloored] == min_chips)
+
+
+@settings(max_examples=100, deadline=None)
+@given(theta=float_thetas(), min_chips=st.integers(1, 5))
+def test_oversubscription_queues_smallest_theta(theta, min_chips):
+    """More active jobs than the floor can hold: exactly floor(N/min) jobs
+    are served (the largest thetas), the rest queue at 0 chips."""
+    active = theta > 0
+    n_active = int(active.sum())
+    if n_active < 2:
+        return
+    n_chips = min_chips * (n_active - 1)  # can't serve everyone
+    chips = quantize_allocation(theta, n_chips, min_chips=min_chips)
+    served = chips > 0
+    assert served.sum() <= n_chips // min_chips
+    assert chips.sum() == n_chips
+    # every served job's theta >= every queued active job's theta
+    if served.any() and (active & ~served).any():
+        assert theta[served].min() >= theta[active & ~served].max() - 1e-12
+
+
+@pytest.mark.parametrize("n_chips,min_chips", [(0, 1), (4, 5)])
+def test_degenerate_pools(n_chips, min_chips):
+    theta = np.array([0.5, 0.5])
+    np.testing.assert_array_equal(
+        quantize_allocation(theta, n_chips, min_chips=min_chips), [0, 0]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(quantize_allocation_jax(jnp.asarray(theta), n_chips,
+                                           min_chips=min_chips)),
+        [0, 0],
+    )

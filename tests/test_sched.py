@@ -93,7 +93,7 @@ def test_int8_compression_error_feedback_converges():
     f = jax.jit(lambda e: jax.vmap(lambda _, e: one(e), in_axes=(0, None),
                                    axis_name="i")(jnp.arange(1), e))
     acc = jnp.zeros(64)
-    for t in range(50):
+    for _ in range(50):
         out, err = f(err)
         out = jax.tree.map(lambda x: x[0], out)
         err = jax.tree.map(lambda x: x[0], err)
