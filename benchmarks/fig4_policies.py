@@ -23,7 +23,7 @@ def run(n_servers: float = 1e6, n_jobs: int = 500, n_seeds: int = 10,
     import jax
     import jax.numpy as jnp
 
-    from repro.core import make_policy, simulate
+    from repro.core import simulate
 
     if quick:
         n_jobs, n_seeds, n_alpha = 100, 3, 6
@@ -38,7 +38,9 @@ def run(n_servers: float = 1e6, n_jobs: int = 500, n_seeds: int = 10,
 
     @jax.jit
     def flow_knee(x, p, alpha):
-        pol = lambda xx, pp: knee(xx, pp, n_servers=n_arr, alpha=alpha)
+        def pol(xx, pp):
+            return knee(xx, pp, n_servers=n_arr, alpha=alpha)
+
         return simulate(x, p, n_servers, pol).total_flowtime
 
     @jax.jit

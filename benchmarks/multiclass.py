@@ -1,0 +1,315 @@
+"""Beyond paper: multi-class workloads (per-class speedup + size + arrivals).
+
+The paper's heSRPT assumes one job class; Berg et al. 2024 shows the
+production regime is heterogeneous — classes differ in speedup exponent
+``p_k`` and size distribution — and Berg et al. 2020 changes the objective
+to mean *slowdown*.  This benchmark sweeps both through the unified engine
+(``core/multiclass.py``): K = 2..4 class mixtures, >=1000 jobs x >=10 seeds
+x >=2 loads x >=3 class-aware policies, each policy in ONE jit+vmap device
+call, reporting per-class mean flow time and mean slowdown plus the gap
+between class-aware and class-blind heSRPT on both objectives.
+
+Sections:
+
+- per-K sweeps: class-aware policies (heSRPT-per-class, class-weighted
+  water-filling, slowdown-weighted heSRPT) vs the class-blind heSRPT
+  baseline (true per-class physics, scheduler assumes one averaged p);
+- slice-snapped quantized regime: the same multi-class engine with
+  whole-chip allocations snapped to power-of-two ICI slices;
+- cross-check: the engine's multi-class trajectory vs the per-event
+  ``ClusterScheduler(class_aware=True)`` NumPy oracle — exact chips
+  event-for-event for the quantized rule, <=1e-10 flow times for the
+  continuous rule.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.multiclass import ClassSpec
+
+POLICIES = ("hesrpt_pc", "waterfill", "hesrpt_sd", "hesrpt_blind")
+RATES = (0.5, 2.0, 8.0)
+
+
+def class_grid(K: int) -> tuple[ClassSpec, ...]:
+    """K classes spanning the speedup/size heterogeneity range: exponents
+    spread over [0.3, 0.85], heavier tails and larger scales for the more
+    parallelizable classes (big elastic training jobs), equal arrival mix."""
+    ps = np.linspace(0.3, 0.85, K)
+    alphas = np.linspace(1.5, 2.5, K)
+    scales = np.geomspace(1.0, 2.0 ** (K - 1), K)
+    return tuple(
+        ClassSpec(p=float(p), mix=1.0 / K, size_alpha=float(a), size_scale=float(s))
+        for p, a, s in zip(ps, alphas, scales, strict=True)
+    )
+
+
+# --------------------------------------------------- per-event reference loop
+def run_stream_reference_mc(
+    policy: str,
+    arrivals,
+    sizes,
+    p_jobs,
+    class_ids,
+    *,
+    n_chips=64,
+    quantize=True,
+    min_chips=1,
+    snap_slices=False,
+    class_weights=None,
+    return_events=False,
+):
+    """Per-event Python loop over ``ClusterScheduler(class_aware=True)`` —
+    the multi-class twin of ``benchmarks.arrivals.run_stream_reference``
+    (same admission epsilon / departure nudge / idle advance), with each
+    job progressing at its OWN class exponent.  This is the NumPy oracle
+    the multi-class engine path is cross-checked against."""
+    from repro.sched import ClusterScheduler, Job
+
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    sizes = np.asarray(sizes, dtype=np.float64)
+    p_jobs = np.asarray(p_jobs, dtype=np.float64)
+    class_ids = np.asarray(class_ids)
+    n_jobs = len(sizes)
+    sched = ClusterScheduler(
+        n_chips, policy=policy, quantize=quantize, min_chips=min_chips,
+        snap_slices=snap_slices, class_aware=True, class_weights=class_weights,
+    )
+    i = 0  # next arrival index
+    guard = 0
+    while i < n_jobs or sched.active_jobs():
+        while i < n_jobs and arrivals[i] <= sched.time + 1e-12:
+            sched.add_job(
+                Job(f"j{i}", size=float(sizes[i]), p=float(p_jobs[i]),
+                    class_id=int(class_ids[i]))
+            )
+            sched.jobs[f"j{i}"].arrival_time = float(arrivals[i])
+            i += 1
+        act = sched.active_jobs()
+        if not act:
+            sched.time = float(arrivals[i])  # idle until next arrival
+            continue
+        sched.allocations()
+        rates = sched.job_rates(act)  # per-job p: the true multi-class physics
+        dts = [
+            j.remaining / r for j, r in zip(act, rates, strict=True) if r > 0
+        ]
+        dt = min(dts)
+        if i < n_jobs:
+            dt = min(dt, float(arrivals[i]) - sched.time)
+        sched.advance_fluid(until_departure=False, dt=dt + 1e-15)
+        guard += 1
+        if guard > 50 * n_jobs:
+            raise RuntimeError("multi-class stream sim did not converge")
+    flows = np.array(
+        [sched.jobs[f"j{k}"].completion_time - sched.jobs[f"j{k}"].arrival_time
+         for k in range(n_jobs)]
+    )
+    if return_events:
+        allocs = [(e["t"], e["chips"]) for e in sched.events
+                  if e["event"] == "allocate"]
+        return flows, allocs
+    return flows
+
+
+def cross_check(
+    policies=("hesrpt_pc", "waterfill", "hesrpt_sd"),
+    *,
+    n_jobs=12,
+    rate=1.0,
+    n_chips=64,
+    seed=0,
+    snap_slices=False,
+    classes=None,
+) -> dict:
+    """Engine multi-class trajectory vs the class-aware ClusterScheduler.
+
+    Quantized rule: integer chips must agree *exactly* at every decision
+    epoch.  Continuous rule: per-job flow times to <=1e-10 relative (the
+    reference loop advances with a +1e-15 nudge the scan does not need).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.quantized import engine_events
+    from repro.core import engine as _engine
+    from repro.core import make_scenario
+    from repro.core.multiclass import (
+        as_specs,
+        class_rule,
+        policy_weights,
+        simulate_multiclass,
+    )
+
+    specs = as_specs(classes if classes is not None else class_grid(2))
+    scn = make_scenario("multiclass_poisson", classes=specs)(
+        jax.random.PRNGKey(seed), n_jobs, rate
+    )
+    arrivals = np.asarray(scn.arrival_times)
+    sizes = np.asarray(scn.x0)
+    p_jobs = np.asarray(scn.p_job)
+    cls = np.asarray(scn.class_ids)
+
+    worst_cont, worst_q, chips_ok, n_events = 0.0, 0.0, True, 0
+    for name in policies:
+        # --- continuous rule vs fractional-chips oracle
+        flows_ref = run_stream_reference_mc(
+            name, arrivals, sizes, p_jobs, cls, n_chips=n_chips, quantize=False
+        )
+        res = simulate_multiclass(
+            scn, classes=specs, policy=name, n_servers=float(n_chips)
+        )
+        flows = np.asarray(res.flow_times)
+        worst_cont = max(worst_cont, float(np.max(np.abs(flows - flows_ref)
+                                                  / flows_ref)))
+        # --- quantized rule vs whole-chips oracle, event-for-event
+        flows_qref, allocs_ref = run_stream_reference_mc(
+            name, arrivals, sizes, p_jobs, cls, n_chips=n_chips,
+            quantize=True, snap_slices=snap_slices, return_events=True,
+        )
+        dtype = jnp.result_type(scn.x0.dtype, jnp.float32)
+        order = jnp.argsort(scn.arrival_times)
+        w = policy_weights(name, x0=scn.x0.astype(dtype))
+        rule = class_rule(
+            name, n_chips=n_chips, snap_slices=snap_slices, dtype=dtype,
+            w=None if w is None else jnp.asarray(w, dtype)[order],
+        )
+        eng = _engine.run(
+            scn.x0.astype(dtype), scn.arrival_times.astype(dtype),
+            scn.p_job.astype(dtype), rule, record=True,
+        )
+        allocs_eng = engine_events(eng, arrivals)
+        chips_ok &= len(allocs_eng) == len(allocs_ref)
+        for (_, c_e), (_, c_r) in zip(allocs_eng, allocs_ref, strict=False):
+            chips_ok &= c_e == c_r
+        n_events += len(allocs_ref)
+        flows_q = np.asarray(eng.completion_times) - arrivals
+        worst_q = max(worst_q, float(np.max(np.abs(flows_q - flows_qref)
+                                            / flows_qref)))
+    return {
+        "chips_exact": bool(chips_ok),
+        "n_events": n_events,
+        "worst_continuous_flow_rel": worst_cont,
+        "worst_quantized_flow_rel": worst_q,
+    }
+
+
+# ----------------------------------------------------------------- the sweeps
+def sweep(policies=POLICIES, rates=RATES, *, classes, n_jobs=1000, n_seeds=10,
+          n_servers=256.0, seed=0, **kw):
+    """Multi-class heavy-traffic sweep: one jit+vmap call per policy."""
+    from repro.core import multiclass_sweep
+
+    return multiclass_sweep(
+        policies, rates, classes=classes, n_jobs=n_jobs, n_seeds=n_seeds,
+        n_servers=n_servers, seed=seed, **kw,
+    )
+
+
+def gap_rows(res: dict, rates) -> list[str]:
+    """Class-aware vs class-blind heSRPT, both objectives, per load."""
+    lines = []
+    for metric, label in (("mean_flowtime", "flow"), ("mean_slowdown", "slowdown")):
+        aware = {
+            name: np.asarray(res[name][metric]).mean(axis=1)
+            for name in res if name != "hesrpt_blind"
+        }
+        blind = np.asarray(res["hesrpt_blind"][metric]).mean(axis=1)
+        best = {r: min(a[ri] for a in aware.values())
+                for ri, r in enumerate(rates)}
+        lines.append(
+            f"  class-aware/class-blind mean {label}: " + "  ".join(
+                f"{r:g}: {best[r] / blind[ri]:.3f}" for ri, r in enumerate(rates)
+            )
+        )
+    return lines
+
+
+def main(quick: bool = False, smoke: bool = False):
+    if smoke:
+        ks, n_jobs, n_seeds, rates = (2,), 80, 4, (0.5, 4.0)
+    elif quick:
+        ks, n_jobs, n_seeds, rates = (2, 3), 300, 8, (0.5, 2.0, 8.0)
+    else:
+        ks, n_jobs, n_seeds, rates = (2, 3, 4), 1000, 10, RATES
+
+    lines = []
+    all_res = {}
+    for K in ks:
+        classes = class_grid(K)
+        t0 = time.perf_counter()
+        res = sweep(rates=rates, classes=classes, n_jobs=n_jobs,
+                    n_seeds=n_seeds)
+        dt = time.perf_counter() - t0
+        all_res[K] = res
+        lines.append(
+            f"K={K} classes (p_k = "
+            + ", ".join(f"{c.p:.2f}" for c in classes)
+            + f"): {n_jobs} jobs x {n_seeds} seeds x {len(rates)} loads x "
+            f"{len(POLICIES)} policies, one jit+vmap call per policy "
+            f"({dt:.1f}s incl. compile)"
+        )
+        lines.append(f"  {'rate':>8s} " + " ".join(f"{p:>14s}" for p in POLICIES)
+                     + "   (mean flow time | mean slowdown)")
+        for ri, r in enumerate(rates):
+            cells = []
+            for name in POLICIES:
+                f = float(np.mean(np.asarray(res[name]["mean_flowtime"])[ri]))
+                s = float(np.mean(np.asarray(res[name]["mean_slowdown"])[ri]))
+                cells.append(f"{f:7.3f}|{s:6.2f}")
+            lines.append(f"  {r:8.1f} " + " ".join(cells))
+        lines.extend(gap_rows(res, rates))
+        # per-class breakdown at the heaviest load, heSRPT-per-class
+        cf = np.asarray(res["hesrpt_pc"]["class_flowtime"])[-1].mean(axis=0)
+        cs = np.asarray(res["hesrpt_pc"]["class_slowdown"])[-1].mean(axis=0)
+        lines.append(
+            "  per-class (hesrpt_pc, heaviest load): "
+            + "  ".join(
+                f"k={k}: flow {cf[k]:.3f} slow {cs[k]:.2f}"
+                for k in range(K)
+            )
+        )
+
+    # slice-snapped quantized regime, K=2
+    classes = class_grid(2)
+    sq, ss = (
+        sweep(("hesrpt_pc",), rates, classes=classes,
+              n_jobs=min(n_jobs, 300), n_seeds=min(n_seeds, 8),
+              n_chips=256, snap_slices=snap)
+        for snap in (False, True)
+    )
+    ratio = [
+        float(np.mean(np.asarray(ss["hesrpt_pc"]["mean_flowtime"])[ri])
+              / np.mean(np.asarray(sq["hesrpt_pc"]["mean_flowtime"])[ri]))
+        for ri in range(len(rates))
+    ]
+    lines.append(
+        "slice-snapped / whole-chips mean flow time (hesrpt_pc, 256 chips): "
+        + "  ".join(f"{r:g}: {g:.3f}" for r, g in zip(rates, ratio, strict=True))
+    )
+
+    cc = cross_check(n_jobs=12 if smoke else 14)
+    lines.append(
+        f"cross-check vs ClusterScheduler(class_aware=True), "
+        f"{12 if smoke else 14}-job 2-class Poisson x 3 policies: chips exact "
+        f"over {cc['n_events']} events: {cc['chips_exact']}, continuous flow "
+        f"rel err {cc['worst_continuous_flow_rel']:.1e}, quantized flow rel "
+        f"err {cc['worst_quantized_flow_rel']:.1e}"
+    )
+    assert cc["chips_exact"], "multi-class quantized engine diverged from oracle"
+    assert cc["worst_continuous_flow_rel"] < 1e-10, cc
+    assert cc["worst_quantized_flow_rel"] < 1e-9, cc
+    return "\n".join(lines), {"sweeps": all_res, "cross_check": cc,
+                              "snap_ratio": ratio}
+
+
+if __name__ == "__main__":
+    import jax
+
+    # Same rationale as benchmarks/run.py: cross-checks against the f64
+    # ClusterScheduler path need f64.
+    jax.config.update("jax_enable_x64", True)
+    print(main(quick=True)[0])

@@ -73,6 +73,14 @@ def main() -> None:
     text, _ = quantized.main(quick=quick, smoke=smoke)
     print(text)
 
+    _section("Beyond paper — multi-class workloads (per-class p, slowdown) "
+             + ("(smoke)" if smoke else
+                "(quick)" if quick else "(1000 jobs x 10 seeds, K=2..4)"))
+    from benchmarks import multiclass
+
+    text, _ = multiclass.main(quick=quick, smoke=smoke)
+    print(text)
+
     if not smoke:
         _section("Beyond paper — scheduler decision cost at cluster scale")
         from benchmarks import sched_scale

@@ -28,18 +28,64 @@ def scale_free_constants(result: SimResult) -> jax.Array:
     theta = result.theta_trace  # [E, M]
     sizes = result.sizes_trace  # [E, M]
     active = sizes > 0
-
-    def per_epoch(th, act):
-        # rank jobs by remaining size descending within this epoch
-        order = jnp.argsort(jnp.where(act, -sizes[0], 0.0))
-        del order  # ranks are static across epochs for heSRPT (SJF order)
-        csum = jnp.cumsum(th) - th  # sum of thetas of *larger* jobs if sorted
-        return jnp.where(act & (th > 0), csum / th, jnp.nan)
-
     # For heSRPT sizes are already processed in globally fixed SJF order if
-    # x0 was sorted descending; callers pass sorted instances for this check.
+    # x0 was sorted descending; callers pass sorted instances for this check
+    # (ranks are then static across epochs), so the cumulative theta of the
+    # *larger* jobs is a prefix sum along the job axis.
     csum = jnp.cumsum(theta, axis=1) - theta
     return jnp.where(active & (theta > 0), csum / theta, jnp.nan)
+
+
+# ------------------------------------------------- per-class aggregation
+def per_class_mean(
+    values: jax.Array, class_ids: jax.Array, n_classes: int
+) -> jax.Array:
+    """Mean of ``values`` grouped by class id (shape ``[n_classes]``).
+
+    Pure segment-sum, so it jit/vmaps inside the multi-class sweeps.
+    Classes with no jobs report ``nan`` (there is no mean to take).
+    """
+    ids = jnp.asarray(class_ids)
+    vals = jnp.asarray(values)
+    sums = jax.ops.segment_sum(vals, ids, num_segments=n_classes)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(vals), ids, num_segments=n_classes
+    )
+    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1), jnp.nan)
+
+
+def per_class_count(class_ids: jax.Array, n_classes: int) -> jax.Array:
+    """Number of jobs per class id (shape ``[n_classes]``, int32)."""
+    return jax.ops.segment_sum(
+        jnp.ones_like(jnp.asarray(class_ids), jnp.int32),
+        jnp.asarray(class_ids),
+        num_segments=n_classes,
+    )
+
+
+def per_class_summary(
+    flow_times: jax.Array,
+    slowdowns: jax.Array,
+    completion_times: jax.Array,
+    class_ids: jax.Array,
+    n_classes: int,
+) -> dict[str, jax.Array]:
+    """Per-class aggregates of one trajectory: mean flow time, mean
+    slowdown, job count, and mean completion *order* (0-based rank of each
+    job's departure among all departures, averaged per class — which
+    classes the policy clears first)."""
+    times = jnp.asarray(completion_times)
+    order_rank = jnp.zeros(times.shape[0]).at[jnp.argsort(times)].set(
+        jnp.arange(times.shape[0], dtype=times.dtype)
+    )
+    return {
+        "mean_flowtime": per_class_mean(flow_times, class_ids, n_classes),
+        "mean_slowdown": per_class_mean(slowdowns, class_ids, n_classes),
+        "count": per_class_count(class_ids, n_classes),
+        "mean_completion_order": per_class_mean(
+            order_rank, class_ids, n_classes
+        ),
+    }
 
 
 def summarize(result: SimResult, p: jax.Array) -> dict[str, jax.Array]:

@@ -191,29 +191,51 @@ def simulate_scenario(
     allocation rule; the dynamics use the true sizes and exponent.  Pass
     ``n_chips`` for the quantized (whole-chips) regime, else the
     continuously-divisible system with ``n_servers`` is simulated.
+
+    Multi-class scenarios (``scn.p_job`` set) run with each job's true
+    class exponent in the *physics* while the policy keeps seeing the
+    scalar ``p`` (or ``scn.p_hat``) — i.e. this wrapper is the class-BLIND
+    baseline; class-aware policies live in ``core/multiclass.py``.
     """
     x0 = jnp.asarray(scn.x0)
     dtype = jnp.result_type(x0.dtype, jnp.float32)
     x0 = x0.astype(dtype)
     arrival_times = jnp.asarray(scn.arrival_times).astype(dtype)
+    order = jnp.argsort(arrival_times)
     factors = scn.size_factors
     if factors is not None:
         # The engine scans jobs in arrival order; permute to match.
-        factors = jnp.asarray(factors, dtype)[jnp.argsort(arrival_times)]
+        factors = jnp.asarray(factors, dtype)[order]
+    p_phys = p
+    p_hat = scn.p_hat
+    if scn.p_job is not None:
+        p_phys = jnp.asarray(scn.p_job, dtype)
+        if p_hat is None:
+            p_hat = p  # the class-blind policy still assumes the scalar p
+    if p_hat is not None and jnp.ndim(p_hat) >= 1:
+        # A per-job p_hat vector (multi-class sigma_p noise) cannot be fed
+        # to the single-class policies — their rank brackets only telescope
+        # to sum(theta)=1 for ONE exponent.  The class-blind scheduler this
+        # wrapper models holds a single estimate anyway: the mean of its
+        # per-job noisy estimates.  (Class-aware per-job p_hat handling
+        # lives in core/multiclass.py, whose policies renormalize.)
+        p_hat = jnp.mean(jnp.asarray(p_hat, dtype))
     if n_chips is not None:
         rule = engine.quantized_rule(
             policy, n_chips, min_chips=min_chips, dtype=dtype,
-            size_factors=factors, p_hat=scn.p_hat,
+            size_factors=factors, p_hat=p_hat,
         )
         n_alone = n_chips
     else:
         rule = engine.continuous_rule(
             policy, n_servers, dtype=dtype,
-            size_factors=factors, p_hat=scn.p_hat,
+            size_factors=factors, p_hat=p_hat,
         )
         n_alone = n_servers
-    res = engine.run(x0, arrival_times, p, rule, horizon=horizon, rel_tol=rel_tol)
-    return _finalize(x0, arrival_times, res.completion_times, p, n_alone)
+    res = engine.run(
+        x0, arrival_times, p_phys, rule, horizon=horizon, rel_tol=rel_tol
+    )
+    return _finalize(x0, arrival_times, res.completion_times, p_phys, n_alone)
 
 
 # --------------------------------------------------------------- load sweeps
@@ -294,21 +316,27 @@ def _sweep_fn(name, n_jobs, p, n_servers, size_alpha, metric, scenario,
     """Persistent jitted sweep per parameter set, so repeat calls (and a
     warmup before timing) hit XLA's compilation cache instead of rebuilding
     a fresh ``jax.jit`` object each time."""
+    from repro.core.scenarios import _any_pos
+
     kw = dict(scn_kw)
     sampler = make_scenario(scenario, size_alpha=size_alpha, p=p, **kw)
-    noisy = kw.get("sigma_size", 0.0) > 0 or kw.get("sigma_p", 0.0) > 0
+    noisy = _any_pos(kw.get("sigma_size", 0.0)) or _any_pos(kw.get("sigma_p", 0.0))
     # Sort-free ranked scan where the policy allows it (heSRPT, EQUI,
     # SRPT — ~20x faster at M=1000); generic sort-per-event otherwise.
     # Estimation noise and chip quantization both break the carried-rank
-    # invariants, so those paths stay generic.
+    # invariants, and scenarios that draw per-job exponents (``p_job``,
+    # the multi-class case) have rates that are not monotone in remaining
+    # size — all of those fall back to the generic sort-per-event path.
+    # (``scn.p_job is None`` is static per sampler, so the branch below is
+    # resolved at trace time, not per step.)
     rank_pol = make_rank_policy(name) if n_chips is None and not noisy else None
-    pol = None if rank_pol else make_policy(
+    pol = make_policy(
         name, n_servers=(n_chips if n_chips is not None else n_servers)
     )
 
     def one(key, rate):
         scn = sampler(key, n_jobs, rate)
-        if rank_pol is not None:
+        if rank_pol is not None and scn.p_job is None:
             res = simulate_online_ranked(
                 scn.x0, scn.arrival_times, p, n_servers, rank_pol
             )

@@ -8,7 +8,10 @@ every job linearly, repeat.  This module is that loop, written once as a
 single ``jax.lax.scan`` and parameterized along two axes:
 
 - **Allocation rule** (``AllocRule``): maps the remaining sizes of the
-  *arrived, unfinished* jobs to ``(alloc, rate)`` per job.
+  *arrived, unfinished* jobs to ``(alloc, rate)`` per job.  The speedup
+  exponent may be a scalar (the paper) or a per-job vector (multi-class
+  workloads, ``core/multiclass.py``); quantized rules can additionally
+  snap chip counts to power-of-two ICI slices (:func:`snap_to_slices_jax`).
 
   * :func:`continuous_rule` — the paper's continuously-divisible system:
     ``theta`` from any ``core/policies.py`` policy, rate ``s(theta_i N)``.
@@ -50,7 +53,14 @@ from repro.core.policies import Policy
 
 # (x_active, p) -> (alloc, rate); ``alloc`` is theta for continuous rules
 # and integer chips for quantized rules, ``rate`` the per-job service rate.
+# ``p`` may be a scalar (single class) or a per-job vector (multi-class, in
+# the engine's arrival-sorted order — see :func:`run`).
 AllocRule = Callable[[jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+
+# Power-of-two ICI-friendly slice sizes shared with ``sched.quantize``'s
+# ``snap_to_slices`` NumPy oracle (single source of truth lives here so the
+# engine's scan and the per-event cluster path can never disagree).
+DEFAULT_SLICES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
 class EngineTrace(NamedTuple):
@@ -103,12 +113,18 @@ def quantized_rule(
     dtype,
     size_factors: jax.Array | None = None,
     p_hat=None,
+    snap_slices: bool = False,
+    slices: tuple[int, ...] = DEFAULT_SLICES,
 ) -> AllocRule:
     """Whole-chips allocation: largest-remainder rounding of ``theta * N``.
 
     This is ``sched/cluster.py``'s decision epoch — policy then quantize —
     as a pure scan step, so the integer-allocation regime can be swept
-    jit+vmap instead of one Python event at a time.
+    jit+vmap instead of one Python event at a time.  ``snap_slices=True``
+    additionally restricts every job to ICI-friendly power-of-two slice
+    sizes (:func:`snap_to_slices_jax`, exact vs the NumPy
+    ``sched.quantize.snap_to_slices`` oracle), making the slice-snapped
+    regime sweepable too.
     """
 
     def rule(x_act, p):
@@ -116,6 +132,8 @@ def quantized_rule(
         p_seen = p if p_hat is None else p_hat
         theta = policy(x_seen, p_seen).astype(dtype)
         chips = quantize_allocation_jax(theta, n_chips, min_chips=min_chips)
+        if snap_slices:
+            chips = snap_to_slices_jax(chips, n_chips, slices=slices)
         return chips, speedup(chips.astype(dtype), p)
 
     return rule
@@ -148,6 +166,13 @@ def run(
     zero points.  Jobs that never depart within the horizon report ``inf``.
     ``record=True`` additionally returns the full per-event trajectory
     (allocations, event times, remaining sizes) in arrival-sorted order.
+
+    ``p`` may be a scalar (the paper's single job class) or a per-job
+    vector in *input* order (the multi-class case: each job carries its
+    class's speedup exponent).  A vector ``p`` is permuted into the
+    engine's arrival-sorted order alongside the sizes before it reaches
+    ``rule`` — rule closures over per-job vectors (weights, noise factors)
+    must be pre-sorted the same way by the caller.
     """
     x0 = jnp.asarray(x0)
     M = x0.shape[0]
@@ -161,6 +186,8 @@ def run(
     order = jnp.argsort(arrival_times)
     arr = arrival_times[order]
     xs = x0[order]
+    if jnp.ndim(p) >= 1:  # per-job exponents travel with their jobs
+        p = jnp.asarray(p)[order]
     idx = jnp.arange(M)
     i0 = jnp.asarray(M if pre_arrived else 0, jnp.int32)
 
@@ -242,6 +269,12 @@ def run_ranked(
 
     Returns the per-job completion times in input order (``inf`` if never
     departed).
+
+    ``p`` must be a *scalar*: with per-job exponents (multi-class) the
+    service rate is no longer monotone in remaining size, so neither
+    carried invariant survives — multi-class streams take the generic
+    :func:`run` path (or are statically dispatched back here when every
+    class shares one exponent, see ``core/multiclass.py``).
     """
     x0 = jnp.asarray(x0)
     M = x0.shape[0]
@@ -401,8 +434,74 @@ def quantize_allocation_jax(
     return base
 
 
+def snap_to_slices_jax(
+    chips: jax.Array, n_chips: int, *, slices: tuple[int, ...] = DEFAULT_SLICES
+) -> jax.Array:
+    """Vectorized-jnp port of ``sched.quantize.snap_to_slices``.
+
+    Snap each job's chip count DOWN to the largest slice size ``<= count``
+    (0 if below the smallest slice), then hand leftover chips back greedily:
+    at each round, among jobs whose next slice step still fits the leftover
+    pool and whose *lost* allocation (original chips - snapped) is
+    non-negative, upgrade the job with the largest lost allocation (ties
+    break toward the higher index, matching the oracle's ``>=`` scan).  The
+    leftover pool strictly shrinks every round, so the ``while_loop`` is
+    bounded by ``n_chips`` iterations.
+
+    ``n_chips``/``slices`` are static; returns int32 chips.  Exact
+    agreement with the NumPy oracle is property-tested in
+    tests/test_quantize.py.
+    """
+    sl = jnp.asarray(sorted(slices), jnp.int32)
+    S = sl.shape[0]
+    chips0 = jnp.asarray(chips).astype(jnp.int32)
+    M = chips0.shape[0]
+    if M == 0:
+        return chips0
+    idx = jnp.arange(M, dtype=jnp.int32)
+
+    # Snap down: largest slice <= count (0 when count < slices[0]).
+    down = jnp.searchsorted(sl, chips0, side="right") - 1
+    snapped0 = jnp.where(down >= 0, sl[jnp.maximum(down, 0)], 0)
+    left0 = jnp.int32(n_chips) - jnp.sum(snapped0)
+
+    def candidate(snapped, left):
+        nxt_i = jnp.searchsorted(sl, snapped, side="right")
+        nxt = sl[jnp.minimum(nxt_i, S - 1)]
+        step = nxt - snapped
+        lost = chips0 - snapped
+        elig = (
+            (nxt_i < S)
+            & (step <= left)
+            & (lost >= 0)
+            & ~((snapped == 0) & (chips0 == 0))
+        )
+        # Max lost, ties to the highest index — the oracle's `>=` scan.
+        key = jnp.where(elig, lost * M + idx, -1)
+        j = jnp.argmax(key)
+        return j, nxt[j], step[j], key[j] >= 0
+
+    # The chosen candidate rides in the carry so each round computes it
+    # once (the next candidate is derived at the end of body, not re-done
+    # in cond) — this runs inside every quantized scan step.
+    def cond(state):
+        _, left, _, _, _, any_elig = state
+        return any_elig & (left > 0)
+
+    def body(state):
+        snapped, left, j, nxt_j, step_j, _ = state
+        snapped = snapped.at[j].set(nxt_j)
+        left = left - step_j
+        return (snapped, left, *candidate(snapped, left))
+
+    init = (snapped0, left0, *candidate(snapped0, left0))
+    snapped, *_ = jax.lax.while_loop(cond, body, init)
+    return snapped
+
+
 __all__ = [
     "AllocRule",
+    "DEFAULT_SLICES",
     "EngineResult",
     "EngineTrace",
     "continuous_rule",
@@ -410,4 +509,5 @@ __all__ = [
     "quantized_rule",
     "run",
     "run_ranked",
+    "snap_to_slices_jax",
 ]

@@ -223,6 +223,134 @@ def knee(
     return jax.lax.cond(total_knee <= n_servers, undersub, oversub, None)
 
 
+# ------------------------------------------------- multi-class (per-job p)
+# These policies accept a per-job exponent vector ``p`` (shape [M]) so job
+# classes with different speedup curves (Berg et al. 2024) share one system.
+# They are also the building blocks of ``core/multiclass.py``, which owns
+# the class-id bookkeeping, the static class-blind reduction, and the
+# engine/cluster dispatch.
+def hesrpt_per_class(x: jax.Array, p: jax.Array) -> jax.Array:
+    """Class-aware heSRPT: per-job Thm-7 brackets with each job's own ``p``.
+
+    Jobs are ranked globally by remaining size (descending, as in heSRPT);
+    job ``i`` with rank ``r`` and exponent ``p_i`` takes the bracket::
+
+        (r/m)^(1/(1-p_i)) - ((r-1)/m)^(1/(1-p_i))
+
+    i.e. the share Thm 7 would grant it in a homogeneous system of its own
+    class — jobs with a *flatter* speedup curve (small ``p_i``) claim
+    relatively less of the pool at the same rank, which is the class-aware
+    fluid intuition of Berg et al. 2024.  Brackets are renormalized to sum
+    to 1 (with uniform ``p`` the brackets telescope to 1 already, so this
+    reduces to heSRPT up to a last-ulp renormalization; ``core/multiclass``
+    dispatches the uniform case to :func:`hesrpt` statically so the
+    reduction is bit-for-bit).
+    """
+    active = _active(x)
+    m = jnp.sum(active)
+    ranks = size_ranks_desc(x)
+    rf = ranks.astype(x.dtype)
+    c = 1.0 / (1.0 - p)  # per-job exponent
+    m_safe = jnp.maximum(m, 1).astype(x.dtype)
+    th = jnp.where(active, (rf / m_safe) ** c - ((rf - 1.0) / m_safe) ** c, 0.0)
+    total = jnp.maximum(jnp.sum(th), jnp.finfo(x.dtype).tiny)
+    return th / total
+
+
+def weighted_hesrpt(x: jax.Array, p: jax.Array, w: jax.Array) -> jax.Array:
+    """Weighted heSRPT: Thm-7 brackets over cumulative *weight* fractions.
+
+    Generalizes heSRPT toward weighted flow time ``sum_i w_i T_i``: replace
+    the count fraction ``r/m`` by the cumulative weight fraction ``W_r/W``
+    of the jobs ranked largest..smallest by remaining size (Berg et al.
+    2020 derive this bracket structure for mean slowdown, where
+    ``w_i = 1/x_i(0)``)::
+
+        theta_(r) = (W_r/W)^(1/(1-p_r)) - (W_{r-1}/W)^(1/(1-p_r))
+
+    Heavier-weight jobs take a larger jump of the concave bracket curve, so
+    they finish sooner; uniform weights reduce to :func:`hesrpt` (the
+    cumulative count fraction is exactly ``r/m``) and per-job ``p`` is
+    supported the same way as :func:`hesrpt_per_class`.  The brackets are
+    renormalized so the allocation always sums to 1.
+    """
+    active = _active(x)
+    key = jnp.where(active, -x, jnp.inf)
+    order = jnp.argsort(key)  # active desc by size, then inactive
+    w_act = jnp.where(active, w, 0.0)
+    csum_sorted = jnp.cumsum(w_act[order])
+    M = x.shape[0]
+    inv = jnp.zeros(M, order.dtype).at[order].set(jnp.arange(M, dtype=order.dtype))
+    W_hi = csum_sorted[inv]  # cumulative weight of jobs at least this large
+    W_lo = W_hi - w_act
+    W_tot = jnp.maximum(csum_sorted[-1], jnp.finfo(x.dtype).tiny)
+    c = 1.0 / (1.0 - p)
+    th = jnp.where(active, (W_hi / W_tot) ** c - (W_lo / W_tot) ** c, 0.0)
+    total = jnp.maximum(jnp.sum(th), jnp.finfo(x.dtype).tiny)
+    return th / total
+
+
+def waterfill(
+    x: jax.Array,
+    p: jax.Array,
+    n_servers: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    n_iter: int = 64,
+) -> jax.Array:
+    """Class-weighted water-filling (the Berg et al. 2024 fluid allocation).
+
+    Chooses ``theta`` maximizing the aggregate weighted service rate::
+
+        max  sum_i  w_i / x_i * s(theta_i N)      s.t.  sum theta_i = 1
+
+    over the active jobs (``w_i`` an optional per-job class weight, default
+    1; the ``1/x_i`` factor biases toward short remaining work, the myopic
+    flow-time/slowdown greedy).  The objective is strictly concave in
+    ``theta`` for ``p_i in (0,1)``, so the KKT stationarity condition
+
+        w_i/x_i * p_i * N^{p_i} * theta_i^{p_i - 1} = lambda
+
+    has the closed-form water level ``theta_i(lambda) =
+    (g_i/lambda)^{1/(1-p_i)}`` with ``g_i = w_i/x_i * p_i * N^{p_i}``; every
+    active job sits in the interior (the marginal rate blows up at 0), so a
+    monotone bisection on ``log lambda`` solves ``sum theta = 1`` to float
+    precision in ``n_iter`` fixed steps — jit/vmap-safe inside the engine's
+    scan.  The result is renormalized for exact conservation.
+    """
+    active = _active(x)
+    dtype = x.dtype
+    p = jnp.broadcast_to(jnp.asarray(p, dtype), x.shape)
+    xs = jnp.where(active, x, 1.0)
+    wv = jnp.ones_like(x) if w is None else jnp.asarray(w, dtype)
+    wv = jnp.where(active, jnp.maximum(wv, jnp.finfo(dtype).tiny), 1.0)
+    n = jnp.asarray(n_servers, dtype)
+    # log g_i, computed in log space for heavy-tailed x
+    log_g = jnp.log(wv) - jnp.log(xs) + jnp.log(p) + p * jnp.log(n)
+    m = jnp.maximum(jnp.sum(active), 1).astype(dtype)
+    one_minus_p = 1.0 - p
+    # Bracket: at lam_lo = max_i g_i some theta_i = 1 (sum >= 1); at
+    # lam_hi = max_i g_i * m^{1-p_i} every theta_i <= 1/m (sum <= 1).
+    neg_inf = jnp.asarray(-jnp.inf, dtype)
+    lo = jnp.max(jnp.where(active, log_g, neg_inf))
+    hi = jnp.max(jnp.where(active, log_g + one_minus_p * jnp.log(m), neg_inf))
+
+    def theta_of(log_lam):
+        t = jnp.exp((log_g - log_lam) / one_minus_p)
+        return jnp.where(active, t, 0.0)
+
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        too_big = jnp.sum(theta_of(mid)) > 1.0
+        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, bisect, (lo, hi))
+    th = theta_of(0.5 * (lo + hi))
+    total = jnp.maximum(jnp.sum(th), jnp.finfo(dtype).tiny)
+    return jnp.where(jnp.any(active), th / total, jnp.zeros_like(x))
+
+
 # Rank-space registry: policies whose allocation is a pure function of the
 # descending-size ranks (Thm 6 size-invariance).  For all three, the rate is
 # non-increasing in remaining size, so between decision epochs the size
@@ -255,6 +383,8 @@ def make_policy(name: str, *, n_servers: float = 1.0, alpha: float = 1.0) -> Pol
         return lambda x, p: equi(x, p)
     if name == "hell":
         return functools.partial(hell, n_servers=jnp.asarray(n_servers))
+    if name == "waterfill":
+        return functools.partial(waterfill, n_servers=jnp.asarray(n_servers))
     if name == "knee":
         return functools.partial(
             knee, n_servers=jnp.asarray(n_servers), alpha=jnp.asarray(alpha)
@@ -262,4 +392,4 @@ def make_policy(name: str, *, n_servers: float = 1.0, alpha: float = 1.0) -> Pol
     raise ValueError(f"unknown policy {name!r}")
 
 
-POLICY_NAMES = ("hesrpt", "helrpt", "srpt", "equi", "hell", "knee")
+POLICY_NAMES = ("hesrpt", "helrpt", "srpt", "equi", "hell", "knee", "waterfill")

@@ -11,12 +11,16 @@ the workload the allocation engine (``core/engine.py``) is run against:
 - ``bursty`` — a 2-state MAP (Markov-modulated) on-off stream: interarrival
   gaps are Exp(rate_on) or Exp(rate_off) according to a persistent hidden
   state, producing the correlated bursts heavy-traffic studies care about.
+- ``multiclass_poisson`` / ``multiclass_bursty`` — K-class mixtures with
+  per-class speedup exponent, size distribution and arrival share; the
+  samplers live in ``core/multiclass.py`` and register here lazily.
 
-Every sampler accepts ``sigma_size``/``sigma_p`` estimation noise: the
-returned ``size_factors`` (lognormal, median 1) and ``p_hat`` perturb what
-the *policy* sees while the true dynamics keep ``x0`` and ``p`` — see
-``engine.continuous_rule``.  ``trace_scenario`` wraps externally supplied
-arrival/size vectors so trace-driven replay is the base case.
+Every sampler accepts ``sigma_size``/``sigma_p`` estimation noise (scalars
+or per-class sequences): the returned ``size_factors`` (lognormal, median
+1) and ``p_hat`` perturb what the *policy* sees while the true dynamics
+keep ``x0`` and ``p`` — see ``engine.continuous_rule``.  ``trace_scenario``
+wraps externally supplied arrival/size vectors so trace-driven replay is
+the base case.
 
 The registry is deliberately small and flat: benchmarks address scenarios
 by name (``make_scenario("bursty", p=0.5, sigma_size=0.3)``), and adding a
@@ -37,12 +41,17 @@ class Scenario(NamedTuple):
 
     ``size_factors``/``p_hat`` are ``None`` when the scenario carries no
     estimation noise — the policy then sees the true sizes and exponent.
+    ``class_ids``/``p_job`` are ``None`` for single-class scenarios; the
+    multi-class samplers (``core/multiclass.py``) fill them so every job
+    carries its class id and its class's true speedup exponent.
     """
 
     x0: jax.Array  # [M] true job sizes
     arrival_times: jax.Array  # [M] arrival epochs (zeros for batch)
     size_factors: jax.Array | None = None  # [M] policy sees x * factors
-    p_hat: jax.Array | None = None  # scalar; policy sees p_hat, physics p
+    p_hat: jax.Array | None = None  # scalar or [M]; policy sees p_hat
+    class_ids: jax.Array | None = None  # [M] int32 job class ids
+    p_job: jax.Array | None = None  # [M] per-job true speedup exponent
 
 
 # A sampler draws a Scenario; ``rate`` is the sweep knob (arrivals per unit
@@ -95,20 +104,46 @@ def pareto_sizes(key: jax.Array, n_jobs: int, alpha: float = 1.5) -> jax.Array:
 
 
 # -------------------------------------------------------------- the registry
+def _any_pos(sigma) -> bool:
+    """True when a scalar or per-class sequence sigma carries any noise."""
+    if isinstance(sigma, (tuple, list)):
+        return any(s > 0 for s in sigma)
+    return sigma > 0
+
+
 def _with_noise(
-    scn: Scenario, key: jax.Array, p, sigma_size: float, sigma_p: float
+    scn: Scenario, key: jax.Array, p, sigma_size, sigma_p
 ) -> Scenario:
     """Attach estimation noise drawn from fold_in streams of ``key`` (the
     base draw consumed ``key`` itself, so noiseless runs stay bit-identical
-    to the historical samplers)."""
+    to the historical samplers).
+
+    ``sigma_size``/``sigma_p`` may be scalars or per-class sequences (one
+    entry per class id, requires ``scn.class_ids``).  For multi-class
+    scenarios the ``p_hat`` perturbation is per-job, centered on each job's
+    true class exponent ``scn.p_job``.
+    """
     size_factors, p_hat = scn.size_factors, scn.p_hat
     n = scn.x0.shape[0]
-    if sigma_size > 0:
+
+    def per_job(sigma):
+        if isinstance(sigma, (tuple, list)):
+            if scn.class_ids is None:
+                raise ValueError("per-class sigma needs a multi-class scenario")
+            return jnp.asarray(sigma, scn.x0.dtype)[scn.class_ids]
+        return sigma
+
+    if _any_pos(sigma_size):
         kf = jax.random.fold_in(key, 1)
-        size_factors = jnp.exp(sigma_size * jax.random.normal(kf, (n,)))
-    if sigma_p > 0:
+        size_factors = jnp.exp(per_job(sigma_size) * jax.random.normal(kf, (n,)))
+    if _any_pos(sigma_p):
         kp = jax.random.fold_in(key, 2)
-        p_hat = jnp.clip(p + sigma_p * jax.random.normal(kp), 0.05, 0.95)
+        center = scn.p_job if scn.p_job is not None else p
+        per_job_hat = scn.p_job is not None or isinstance(sigma_p, (tuple, list))
+        shape = (n,) if per_job_hat else ()
+        p_hat = jnp.clip(
+            center + per_job(sigma_p) * jax.random.normal(kp, shape), 0.05, 0.95
+        )
     return scn._replace(size_factors=size_factors, p_hat=p_hat)
 
 
@@ -168,20 +203,27 @@ def make_scenario(
 
     ``sigma_size`` is the lognormal sd of the multiplicative size-estimation
     error; ``sigma_p`` the sd of the additive error on the speedup exponent
-    the policy assumes (clipped to (0.05, 0.95)).  ``p`` is only used as the
-    center of the ``p_hat`` perturbation.  Extra ``cfg`` kwargs go to the
-    scenario function (e.g. ``burst``/``p_stay`` for ``bursty``).
+    the policy assumes (clipped to (0.05, 0.95)) — each a scalar, or a
+    per-class sequence for multi-class scenarios.  ``p`` is only used as the
+    center of the ``p_hat`` perturbation (multi-class scenarios center on
+    each job's true class exponent instead).  Extra ``cfg`` kwargs go to the
+    scenario function (e.g. ``burst``/``p_stay`` for ``bursty``, ``classes``
+    for the multi-class samplers).
     """
-    try:
-        fn = SCENARIOS[name.lower()]
-    except KeyError:
-        raise ValueError(
-            f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}"
-        ) from None
+    fn = SCENARIOS.get(name.lower())
+    if fn is None:
+        # The multi-class samplers register themselves on import; resolve
+        # them lazily so `make_scenario("multiclass_poisson", ...)` works
+        # without the caller importing core.multiclass first.
+        from repro.core import multiclass  # noqa: F401  (registers samplers)
+
+        fn = SCENARIOS.get(name.lower())
+    if fn is None:
+        raise ValueError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
 
     def sample(key, n_jobs, rate):
         scn = fn(key, n_jobs, rate, size_alpha=size_alpha, **cfg)
-        if sigma_size > 0 or sigma_p > 0:
+        if _any_pos(sigma_size) or _any_pos(sigma_p):
             scn = _with_noise(scn, key, p, sigma_size, sigma_p)
         return scn
 

@@ -68,7 +68,7 @@ def _attention_fwd_impl(
         q_pos = q_pos_base + iq * block_q  # [bq]
 
         def kv_step(carry, jk):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kb = jax.lax.dynamic_index_in_dim(k5, jk, axis=2, keepdims=False)
             vb = jax.lax.dynamic_index_in_dim(v5, jk, axis=2, keepdims=False)
             logits = jnp.einsum(
@@ -84,7 +84,7 @@ def _attention_fwd_impl(
             m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
             p = jnp.exp(logits - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = corr * l + jnp.sum(p, axis=-1)
+            l_new = corr * lsum + jnp.sum(p, axis=-1)
             acc_new = corr[..., None] * acc + jnp.einsum(
                 "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32)
             )
@@ -96,9 +96,9 @@ def _attention_fwd_impl(
             jnp.zeros(shape, jnp.float32),
             jnp.zeros(shape + (D,), jnp.float32),
         )
-        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
-        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
-        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # [B,Hkv,g,bq]
+        (m, lsum, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = (acc / jnp.maximum(lsum, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(lsum, 1e-30))  # [B,Hkv,g,bq]
         return out, lse
 
     out, lse = jax.lax.map(q_block, jnp.arange(nq))  # [nq, B, Hkv, g, bq, D]
@@ -133,8 +133,12 @@ def _attention_bwd_impl(q, k, v, out, lse, do, *, causal, window, q_offset,
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
     pq, pk = -Sq % block_q, -Sk % block_k
-    pad_q = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else t
-    pad_k = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else t
+    def pad_q(t):
+        return jnp.pad(t, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else t
+
+    def pad_k(t):
+        return jnp.pad(t, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else t
+
     qf = pad_q(q).astype(jnp.float32).reshape(B, Hkv, g, -1, block_q, D)
     dof = pad_q(do).astype(jnp.float32).reshape(B, Hkv, g, -1, block_q, D)
     outf = pad_q(out).astype(jnp.float32).reshape(B, Hkv, g, -1, block_q, D)

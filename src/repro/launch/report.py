@@ -12,9 +12,16 @@ def opt_comparison(results_dir: str) -> str:
     opt, _, _ = load_cells(results_dir, "opt")
     base_by = {(c.arch, c.shape, c.mesh): c for c in base}
     rows = [
-        "| arch | shape | mesh | dominant term (base→opt) | base s | opt s | win | frac base→opt | fits base→opt |",
+        "| arch | shape | mesh | dominant term (base→opt) | base s | opt s "
+        "| win | frac base→opt | fits base→opt |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
+
+    def fits(x):
+        if x.temp_gb is None:
+            return "?"
+        return "y" if x.temp_gb < 16 else f"n({x.temp_gb:.0f}G)"
+
     for c in sorted(opt, key=lambda c: (c.arch, c.shape, c.mesh)):
         b = base_by.get((c.arch, c.shape, c.mesh))
         if b is None:
@@ -22,7 +29,6 @@ def opt_comparison(results_dir: str) -> str:
         b_dom = max(b.compute_s, b.memory_s, b.collective_s)
         o_dom = max(c.compute_s, c.memory_s, c.collective_s)
         win = b_dom / o_dom if o_dom > 0 else float("inf")
-        fits = lambda x: "?" if x.temp_gb is None else ("y" if x.temp_gb < 16 else f"n({x.temp_gb:.0f}G)")
         rows.append(
             f"| {c.arch} | {c.shape} | {c.mesh} | {b.dominant}→{c.dominant} "
             f"| {b_dom:.2f} | {o_dom:.2f} | {win:.1f}x "

@@ -108,7 +108,8 @@ def suggest(dominant: str, rec: dict, useful_ratio: float) -> str:
             return "KV/state cache streaming dominates: shard cache wider or quantize KV to int8"
         return "weight/activation traffic dominates: bf16 gathers, remat policy 'dots', fuse more"
     if useful_ratio < 0.5:
-        return "compute-bound but >2x waste vs model FLOPs: cut remat recompute or MoE dense dispatch"
+        return ("compute-bound but >2x waste vs model FLOPs: cut remat "
+                "recompute or MoE dense dispatch")
     return "near compute roofline: overlap remaining collectives with compute"
 
 

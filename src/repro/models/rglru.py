@@ -46,7 +46,6 @@ def rg_apply(p, x, *, cfg, impl="auto", cache=None, return_cache=False):
     """x [B,S,D].  Cache: {"conv": [B, K-1, lw], "h": [B, lw] fp32,
     "length": i32}."""
     B, S, D = x.shape
-    lw = cfg.lru_width or cfg.d_model
     rec_in = jnp.einsum("bsd,dw->bsw", x, p["w_rec"].astype(x.dtype))
     gel = jax.nn.gelu(
         jnp.einsum("bsd,dw->bsw", x, p["w_gelu"].astype(x.dtype)).astype(jnp.float32)

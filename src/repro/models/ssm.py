@@ -73,7 +73,9 @@ def ssm_apply(p, x, *, cfg, impl="auto", cache=None, return_cache=False):
 
     if cache is None:
         conv_tail = xbc[:, -(cfg.ssm_conv - 1) :, :] if return_cache else None
-        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+        xbc = jax.nn.silu(
+            _causal_conv(xbc, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+        ).astype(x.dtype)
         x_ssm = xbc[..., :di].reshape(B, S, h, pp)
         b_mat = xbc[..., di : di + n]
         c_mat = xbc[..., di + n :]

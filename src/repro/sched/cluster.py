@@ -12,11 +12,16 @@ extensions, flagged as the paper's §4.3 heuristic), recomputes:
 scan-based allocation engine (``core/engine.py``) whenever the instance fits
 the engine's pure-function model — one jit'd device call instead of one
 Python epoch at a time, with the same integer-chips quantization
-(``core.engine.quantize_allocation_jax``, property-tested against the NumPy
-``sched/quantize.py`` oracle used by the per-event path).  The per-event
-Python path (``allocations`` / ``advance_fluid``) remains both the oracle
-the engine is cross-checked against and the fallback for stateful features
-(speedup estimators, slice snapping, per-job p, per-epoch KNEE alpha);
+(``core.engine.quantize_allocation_jax``) and power-of-two slice snapping
+(``core.engine.snap_to_slices_jax``), both property-tested against the
+NumPy ``sched/quantize.py`` oracles used by the per-event path.
+``class_aware=True`` is the multi-class regime: per-job speedup exponents,
+``core.multiclass`` policies, per-job-``p`` fluid physics — this instance
+of the per-event loop is the NumPy oracle the multi-class engine path is
+cross-checked against (``benchmarks/multiclass.py``).  The per-event
+Python path (``allocations`` / ``advance_fluid``) remains both oracle and
+fallback for the remaining stateful features (speedup estimators,
+per-epoch KNEE alpha, heterogeneous p without ``class_aware``);
 ``sched/elastic.py`` uses it to drive real training jobs through
 ``report_progress``.
 """
@@ -41,6 +46,7 @@ class Job:
     arrival_time: float = 0.0
     chips: float = 0  # whole chips normally; fractional when quantize=False
     completion_time: float | None = None
+    class_id: int = 0  # job class (multi-class workloads; 0 = default class)
     estimator: SpeedupEstimator = field(default_factory=SpeedupEstimator)
 
     def __post_init__(self):
@@ -60,6 +66,8 @@ class ClusterScheduler:
         use_estimator: bool = False,
         quantize: bool = True,
         rel_tol: float = 1e-9,
+        class_aware: bool = False,
+        class_weights: dict[int, float] | None = None,
     ):
         self.n_chips = n_chips
         self.policy_name = policy
@@ -73,6 +81,13 @@ class ClusterScheduler:
         # Same role as the engine's rel_tol: a departure must not be kept
         # alive by float residue (~eps * size) from the linear advance.
         self.rel_tol = rel_tol
+        # class_aware=True is the multi-class regime: ``policy`` must be a
+        # ``core.multiclass`` name (hesrpt_pc / waterfill / hesrpt_sd /
+        # hesrpt_blind), allocations see the per-job exponent vector, and
+        # the fluid physics use each job's own p — this is the per-event
+        # NumPy oracle the multi-class engine path is cross-checked against.
+        self.class_aware = class_aware
+        self.class_weights = class_weights or {}
         self.jobs: dict[str, Job] = {}
         self.time = 0.0
         self.events: list[dict] = []
@@ -94,6 +109,42 @@ class ClusterScheduler:
             return blended_p([j.estimator for j in act], [j.remaining for j in act])
         return float(np.mean([j.p for j in act]))
 
+    def _class_inputs(self, act: list[Job], dtype):
+        """Per-job exponent vector and policy weight vector for an active
+        set — ONE construction shared by the per-event oracle path and the
+        engine delegation, so the exactness contract between them (chips
+        equal event-for-event) cannot drift apart."""
+        import jax.numpy as jnp
+
+        from repro.core import multiclass as mc
+
+        p_vec = jnp.asarray([j.p for j in act], dtype)
+        class_w = jnp.asarray(
+            [self.class_weights.get(j.class_id, 1.0) for j in act], dtype
+        )
+        w = mc.policy_weights(
+            self.policy_name,
+            x0=jnp.asarray([j.size for j in act], dtype),
+            class_w=class_w,
+        )
+        return p_vec, w
+
+    def _class_theta(self, act: list[Job]) -> np.ndarray:
+        """Class-aware theta: the SAME jnp allocation function the engine's
+        scan rule calls (``core.multiclass.class_theta``), on the per-job
+        exponent vector — identical ops, identical bits, so the engine
+        cross-check can demand exact chips."""
+        import jax.numpy as jnp
+
+        from repro.core import multiclass as mc
+
+        x = jnp.asarray([j.remaining for j in act])
+        p_vec, w = self._class_inputs(act, x.dtype)
+        theta = mc.class_theta(
+            self.policy_name, x, p_vec, n_servers=float(self.n_chips), w=w
+        )
+        return np.asarray(theta, dtype=np.float64)
+
     # ------------------------------------------------------ decision epochs
     def allocations(self) -> dict[str, float]:
         """Recompute theta -> chips for the current active set (int-valued
@@ -104,13 +155,18 @@ class ClusterScheduler:
         if not act:
             return {}
         p = self.effective_p()
-        x = jnp.asarray([j.remaining for j in act])
-        pol = make_policy(
-            self.policy_name,
-            n_servers=float(self.n_chips),
-            alpha=float(np.median([j.remaining for j in act]) * p / self.n_chips),
-        )
-        theta = np.asarray(pol(x, p), dtype=np.float64)
+        if self.class_aware:
+            theta = self._class_theta(act)
+        else:
+            x = jnp.asarray([j.remaining for j in act])
+            pol = make_policy(
+                self.policy_name,
+                n_servers=float(self.n_chips),
+                alpha=float(
+                    np.median([j.remaining for j in act]) * p / self.n_chips
+                ),
+            )
+            theta = np.asarray(pol(x, p), dtype=np.float64)
         if self.quantize:
             chips = quantize_allocation(theta, self.n_chips, min_chips=self.min_chips)
             if self.snap_slices:
@@ -140,14 +196,22 @@ class ClusterScheduler:
             self.events.append({"t": self.time, "event": "depart", "job": job_id})
 
     # --------------------------------------------------------- fluid model
+    def job_rates(self, act: list[Job]) -> np.ndarray:
+        """Per-job fluid service rates s(chips_j).  Class-aware mode uses
+        each job's own exponent (the true multi-class physics); the
+        single-class mode keeps the historical blended-p behaviour."""
+        if self.class_aware:
+            return np.array([max(j.chips, 0) ** j.p for j in act])
+        p = self.effective_p()
+        return np.array([max(j.chips, 0) ** p for j in act])
+
     def advance_fluid(self, *, until_departure: bool = True, dt: float = 0.0):
         """Advance the fluid simulation: each job progresses at s(chips) =
         chips^p.  Used by benchmarks and the arrival-stream experiments."""
         act = self.active_jobs()
         if not act:
             return 0.0
-        p = self.effective_p()
-        rates = np.array([max(j.chips, 0) ** p for j in act])
+        rates = self.job_rates(act)
         if until_departure:
             with np.errstate(divide="ignore"):
                 tt = np.where(rates > 0, [j.remaining for j in act] / rates, np.inf)
@@ -171,20 +235,27 @@ class ClusterScheduler:
         return step
 
     def _engine_eligible(self) -> bool:
-        """The engine models a pure (x, p) -> allocation rule: uniform p,
-        no online estimator state, no slice snapping, no per-epoch KNEE
-        alpha refitting.  It also needs float64 JAX (else the trajectory
-        would silently drop to f32 and near-tie chip decisions could flip
-        vs the f64 NumPy oracle path) — callers without ``jax_enable_x64``
-        get the Python loop."""
+        """The engine models a pure (x, p) -> allocation rule: no online
+        estimator state and no per-epoch KNEE alpha refitting.  Slice
+        snapping is engine-native now (``snap_to_slices_jax``), and
+        ``class_aware`` instances delegate with the per-job exponent vector
+        (any p mix) as long as the policy is a pure ``core.multiclass``
+        rule; the single-class mode still needs uniform p (its blended-p
+        physics are not a pure per-job rule).  It also needs float64 JAX
+        (else the trajectory would silently drop to f32 and near-tie chip
+        decisions could flip vs the f64 NumPy oracle path) — callers
+        without ``jax_enable_x64`` get the Python loop."""
         import jax
 
+        from repro.core.multiclass import MULTICLASS_POLICY_NAMES
+
         act = self.active_jobs()
+        if not (jax.config.jax_enable_x64 and not self.use_estimator):
+            return False
+        if self.class_aware:
+            return self.policy_name.lower() in MULTICLASS_POLICY_NAMES
         return (
-            jax.config.jax_enable_x64
-            and not self.use_estimator
-            and not self.snap_slices
-            and self.policy_name.lower() != "knee"
+            self.policy_name.lower() != "knee"
             and len({j.p for j in act}) <= 1
         )
 
@@ -200,18 +271,38 @@ class ClusterScheduler:
         ids = [j.job_id for j in act]
         x0 = jnp.asarray([j.remaining for j in act])
         dtype = jnp.result_type(x0.dtype, jnp.float32)
-        p = self.effective_p()
-        pol = make_policy(self.policy_name, n_servers=float(self.n_chips))
-        if self.quantize:
-            rule = _engine.quantized_rule(
-                pol, self.n_chips, min_chips=self.min_chips, dtype=dtype
+        if self.class_aware:
+            from repro.core import multiclass as mc
+
+            # Batch case: arrival sort is the identity, so per-job vectors
+            # in `act` order satisfy the rule's sorted-order contract.
+            p_arg, w = self._class_inputs(act, dtype)
+            p = float(np.mean([j.p for j in act]))  # event-log annotation
+            rule = mc.class_rule(
+                self.policy_name,
+                n_servers=float(self.n_chips),
+                n_chips=self.n_chips if self.quantize else None,
+                min_chips=self.min_chips,
+                snap_slices=self.snap_slices,
+                dtype=dtype,
+                w=w,
             )
         else:
-            rule = _engine.continuous_rule(pol, float(self.n_chips), dtype=dtype)
+            p_arg = p = self.effective_p()
+            pol = make_policy(self.policy_name, n_servers=float(self.n_chips))
+            if self.quantize:
+                rule = _engine.quantized_rule(
+                    pol, self.n_chips, min_chips=self.min_chips, dtype=dtype,
+                    snap_slices=self.snap_slices,
+                )
+            else:
+                rule = _engine.continuous_rule(
+                    pol, float(self.n_chips), dtype=dtype
+                )
         res = _engine.run(
             x0,
             jnp.zeros(len(act), dtype),
-            p,
+            p_arg,
             rule,
             pre_arrived=True,
             horizon=len(act),

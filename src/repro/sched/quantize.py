@@ -7,8 +7,9 @@ a minimum-chips floor; ``snap_to_slices`` optionally restricts every job to
 ICI-friendly slice sizes {1, 2, 4, 8, ...}.
 
 Invariants (property-tested in tests/test_quantize.py, which also checks
-exact agreement with the vectorized-jnp port
-``core.engine.quantize_allocation_jax`` — this NumPy version is the oracle):
+exact agreement with the vectorized-jnp ports
+``core.engine.quantize_allocation_jax`` / ``core.engine.snap_to_slices_jax``
+— these NumPy versions are the oracles):
 - conservation: sum(chips) == n_chips when every active job can hold >= min
   chips (else the smallest-theta jobs are queued with 0),
 - monotone: chips_i is within 1 (or one slice) of theta_i * n_chips
@@ -22,6 +23,8 @@ reproducible by the jnp port; chips are only ever granted to active jobs.
 from __future__ import annotations
 
 import numpy as np
+
+from repro.core.engine import DEFAULT_SLICES
 
 
 def quantize_allocation(
@@ -68,7 +71,7 @@ def quantize_allocation(
     return base
 
 
-def snap_to_slices(chips: np.ndarray, n_chips: int, *, slices=(1, 2, 4, 8, 16, 32, 64, 128, 256)) -> np.ndarray:
+def snap_to_slices(chips: np.ndarray, n_chips: int, *, slices=DEFAULT_SLICES) -> np.ndarray:
     """Snap each job's count DOWN to the largest slice size <= count, then
     hand leftovers (largest-first) to jobs whose next slice step fits."""
     slices = sorted(slices)

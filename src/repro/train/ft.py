@@ -71,7 +71,6 @@ def run_with_recovery(
     history = {"loss": [], "recoveries": []}
     state = {"params": params, "opt_state": opt_state}
     checkpoint.save(ckpt_dir, state, step=0)
-    last_ckpt_step = 0
 
     step = 0
     while step < n_steps:
@@ -95,8 +94,6 @@ def run_with_recovery(
         step += 1
         if step % ckpt_every == 0:
             checkpoint.save(ckpt_dir, state, step=step)
-            last_ckpt_step = step
 
     checkpoint.save(ckpt_dir, state, step=n_steps)
-    del last_ckpt_step
     return state["params"], state["opt_state"], history

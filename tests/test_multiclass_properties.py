@@ -1,0 +1,119 @@
+"""Hypothesis property tests for the multi-class subsystem.
+
+Wider-random twins of the seeded-fuzz checks in tests/test_multiclass.py:
+allocation conservation across classes, per-class monotonicity in
+remaining size, and the class-blind reduction (K classes with one shared
+exponent == the single-class engine bit-for-bit).  Skipped wholesale when
+hypothesis is absent (same convention as tests/test_quantize.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClassSpec,
+    class_theta,
+    make_policy,
+    make_scenario,
+    policy_weights,
+    simulate_multiclass,
+    simulate_online,
+)
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')"
+)
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+CLASS_POLICIES = ("hesrpt_pc", "waterfill", "hesrpt_sd", "hesrpt_blind")
+
+
+def _theta(name, x, p, x0):
+    w = policy_weights(name, x0=x0)
+    return class_theta(name, x, p, n_servers=64.0, w=w)
+
+
+@st.composite
+def class_instances(draw):
+    m = draw(st.integers(1, 14))
+    x = np.array(draw(st.lists(
+        st.floats(1e-3, 1e4, allow_nan=False, allow_infinity=False),
+        min_size=m, max_size=m,
+    )))
+    dead = np.array(draw(st.lists(st.booleans(), min_size=m, max_size=m)))
+    x = np.where(dead, 0.0, x)
+    p = np.array(draw(st.lists(st.floats(0.05, 0.95), min_size=m, max_size=m)))
+    return x, p
+
+
+@settings(max_examples=120, deadline=None)
+@given(inst=class_instances(), name=st.sampled_from(CLASS_POLICIES))
+def test_conservation_across_classes(inst, name):
+    """sum(theta) == 1 over active jobs, 0 on inactive, all >= 0."""
+    x, p = inst
+    x0 = np.where(x > 0, x, 1.0)
+    th = np.asarray(
+        _theta(name, jnp.asarray(x), jnp.asarray(p), jnp.asarray(x0))
+    )
+    assert np.all(th >= 0)
+    assert np.all(th[x <= 0] == 0)
+    if (x > 0).any():
+        np.testing.assert_allclose(th.sum(), 1.0, rtol=1e-9)
+    else:
+        assert th.sum() == 0
+
+
+@st.composite
+def two_class_instances(draw):
+    m = draw(st.integers(2, 14))
+    x = np.array(draw(st.lists(
+        st.floats(1e-2, 1e3, allow_nan=False, allow_infinity=False),
+        min_size=m, max_size=m,
+    )))
+    cls = np.array(draw(st.lists(st.integers(0, 1), min_size=m, max_size=m)))
+    p0 = draw(st.floats(0.1, 0.9))
+    p1 = draw(st.floats(0.1, 0.9))
+    return x, cls, np.where(cls == 0, p0, p1)
+
+
+@settings(max_examples=120, deadline=None)
+@given(inst=two_class_instances(), name=st.sampled_from(("hesrpt_pc",
+                                                         "waterfill")))
+def test_per_class_monotonicity(inst, name):
+    """Within a class, smaller remaining size never means a smaller share."""
+    x, cls, p = inst
+    th = np.asarray(_theta(name, jnp.asarray(x), jnp.asarray(p),
+                           jnp.asarray(x)))
+    for k in (0, 1):
+        xs, ts = x[cls == k], th[cls == k]
+        order = np.argsort(xs, kind="stable")
+        assert np.all(np.diff(ts[order]) <= 1e-9), (xs, ts)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(2, 4),
+    p=st.floats(0.2, 0.8),
+    seed=st.integers(0, 2**16),
+    policy=st.sampled_from(("hesrpt_pc", "hesrpt_blind")),
+)
+def test_class_blind_reduction_bitforbit(k, p, seed, policy):
+    """K equal-p classes (different size distributions) must reproduce the
+    single-class engine exactly on f64."""
+    classes = tuple(
+        ClassSpec(p=p, mix=1.0 / k, size_alpha=1.3 + 0.4 * i,
+                  size_scale=1.0 + 0.5 * i)
+        for i in range(k)
+    )
+    scn = make_scenario("multiclass_poisson", classes=classes)(
+        jax.random.PRNGKey(seed), 16, 2.0
+    )
+    got = simulate_multiclass(scn, classes=classes, policy=policy,
+                              n_servers=64.0)
+    ref = simulate_online(scn.x0, scn.arrival_times, p, 64.0,
+                          make_policy("hesrpt", n_servers=64.0))
+    np.testing.assert_array_equal(np.asarray(got.completion_times),
+                                  np.asarray(ref.completion_times))

@@ -10,16 +10,16 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (
+from repro.core import (  # noqa: E402
     equi,
+    helrpt,
     hesrpt,
     hesrpt_total_flowtime,
-    helrpt,
     omega_star,
     simulate,
     srpt,
 )
-from repro.sched.quantize import quantize_allocation, snap_to_slices
+from repro.sched.quantize import quantize_allocation, snap_to_slices  # noqa: E402
 
 sizes_strategy = st.lists(
     st.floats(min_value=0.05, max_value=100.0, allow_nan=False),

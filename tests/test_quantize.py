@@ -16,8 +16,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.engine import quantize_allocation_jax
-from repro.sched.quantize import quantize_allocation
+from repro.core.engine import (
+    DEFAULT_SLICES,
+    quantize_allocation_jax,
+    snap_to_slices_jax,
+)
+from repro.sched.quantize import quantize_allocation, snap_to_slices
 
 hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')"
@@ -149,6 +153,48 @@ def test_oversubscription_queues_smallest_theta(theta, min_chips):
     # every served job's theta >= every queued active job's theta
     if served.any() and (active & ~served).any():
         assert theta[served].min() >= theta[active & ~served].max() - 1e-12
+
+
+# ------------------------------------------------------------ slice snapping
+@st.composite
+def chip_vectors(draw):
+    """A plausible post-quantization allocation plus the pool it came from:
+    ``n_chips >= sum(chips)`` (with slack so upgrades are reachable)."""
+    m = draw(st.integers(1, 16))
+    chips = np.array(
+        draw(st.lists(st.integers(0, 300), min_size=m, max_size=m)),
+        dtype=np.int64,
+    )
+    slack = draw(st.integers(0, 64))
+    return chips, max(int(chips.sum()) + slack, 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(cv=chip_vectors())
+def test_snap_jax_matches_numpy_oracle(cv):
+    """Exact agreement of the while_loop jnp port with the greedy NumPy
+    oracle, including its `>=` (last-index-wins) tie-break."""
+    chips, n_chips = cv
+    ref = snap_to_slices(chips, n_chips)
+    got = np.asarray(snap_to_slices_jax(jnp.asarray(chips), n_chips))
+    np.testing.assert_array_equal(got.astype(np.int64), ref)
+
+
+@settings(max_examples=200, deadline=None)
+@given(cv=chip_vectors())
+def test_snap_postconditions(cv):
+    """Power-of-two membership, conservation, and no chips conjured for
+    jobs that held none."""
+    chips, n_chips = cv
+    snapped = snap_to_slices(chips, n_chips)
+    assert set(np.unique(snapped)) <= set(DEFAULT_SLICES) | {0}
+    assert snapped.sum() <= n_chips
+    assert np.all(snapped[chips == 0] == 0)
+    # snap-down is a lower bound before upgrades: never below the largest
+    # slice <= chips unless an upgrade moved it *up*.
+    down = np.array([max([s for s in DEFAULT_SLICES if s <= c], default=0)
+                     for c in chips])
+    assert np.all(snapped >= down)
 
 
 @pytest.mark.parametrize("n_chips,min_chips", [(0, 1), (4, 5)])
