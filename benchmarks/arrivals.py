@@ -37,26 +37,35 @@ def stream_trace(n_jobs: int, rate: float, seed: int, size_alpha: float = 1.5):
 
 
 def run_stream_reference(policy: str, arrivals, sizes, *, p=0.5, n_chips=256,
-                         quantize=True, min_chips=1, return_events=False):
+                         quantize=True, min_chips=1, return_events=False,
+                         use_estimator=False, prior_p=None, est_discount=1.0,
+                         est_prior_weight=1.0):
     """Per-event Python loop over ``ClusterScheduler``; returns per-job flow
     times.  ``quantize=False`` keeps fractional chips (the pure fluid model),
     which is what ``core/arrivals.py`` must reproduce to 1e-6; with
     ``quantize=True`` it is the whole-chips oracle the quantized engine is
-    compared against event-for-event.  ``return_events=True`` additionally
-    returns the allocation-event list ``[(t, {job_id: chips}), ...]``."""
+    compared against event-for-event.  ``use_estimator=True`` runs the
+    online-estimation regime (jobs start from ``prior_p`` and fit p from
+    observed throughput; physics keep the true ``p``) — the per-event
+    oracle ``benchmarks/estimation.py`` cross-checks the stateful engine
+    rule against.  ``return_events=True`` additionally returns the
+    allocation-event list ``[(t, {job_id: chips}), ...]``."""
     from repro.sched import ClusterScheduler, Job
 
     arrivals = np.asarray(arrivals, dtype=np.float64)
     sizes = np.asarray(sizes, dtype=np.float64)
     n_jobs = len(sizes)
     sched = ClusterScheduler(n_chips, policy=policy, quantize=quantize,
-                             min_chips=min_chips)
+                             min_chips=min_chips, use_estimator=use_estimator,
+                             est_discount=est_discount,
+                             est_prior_weight=est_prior_weight)
     i = 0  # next arrival index
     guard = 0
     while i < n_jobs or sched.active_jobs():
         # admit everything that has arrived by now
         while i < n_jobs and arrivals[i] <= sched.time + 1e-12:
-            sched.add_job(Job(f"j{i}", size=float(sizes[i]), p=p))
+            sched.add_job(Job(f"j{i}", size=float(sizes[i]), p=p,
+                              prior_p=prior_p))
             sched.jobs[f"j{i}"].arrival_time = float(arrivals[i])
             i += 1
         act = sched.active_jobs()
@@ -65,8 +74,11 @@ def run_stream_reference(policy: str, arrivals, sizes, *, p=0.5, n_chips=256,
             continue
         sched.allocations()
         # fluid-advance to the next departure, but clip at the next arrival
-        pp = sched.effective_p()
-        rates = {j.job_id: max(j.chips, 0) ** pp for j in act}
+        # (job_rates: blended-p physics historically, per-job true p in the
+        # estimator/class-aware regimes — identical values either way for
+        # the uniform-p non-estimator case).
+        r_arr = sched.job_rates(act)
+        rates = {j.job_id: r for j, r in zip(act, r_arr, strict=True)}
         dts = [j.remaining / rates[j.job_id] for j in act if rates[j.job_id] > 0]
         dt = min(dts)
         if i < n_jobs:

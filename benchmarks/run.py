@@ -81,6 +81,15 @@ def main() -> None:
     text, _ = multiclass.main(quick=quick, smoke=smoke)
     print(text)
 
+    _section("Beyond paper — online p-hat estimation vs oracle/stale on "
+             "p-drift " + ("(smoke)" if smoke else
+                           "(quick)" if quick else
+                           "(500 jobs x 20 seeds, 3 arms x 2 scenarios)"))
+    from benchmarks import estimation
+
+    text, _ = estimation.main(quick=quick, smoke=smoke)
+    print(text)
+
     if not smoke:
         _section("Beyond paper — scheduler decision cost at cluster scale")
         from benchmarks import sched_scale

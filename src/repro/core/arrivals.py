@@ -196,6 +196,13 @@ def simulate_scenario(
     class exponent in the *physics* while the policy keeps seeing the
     scalar ``p`` (or ``scn.p_hat``) — i.e. this wrapper is the class-BLIND
     baseline; class-aware policies live in ``core/multiclass.py``.
+
+    Drift scenarios (``scn.p_drift`` set) make the true exponent
+    piecewise-constant in time; the policy then sees the *current* true
+    regime (the oracle arm) unless ``scn.p_hat`` pins what it believes
+    (the stale arm).  The arm that has to *earn* its estimate —
+    allocating with an online p-hat fit from observed throughput — is
+    ``estimation.simulate_scenario_estimated``.
     """
     x0 = jnp.asarray(scn.x0)
     dtype = jnp.result_type(x0.dtype, jnp.float32)
@@ -233,7 +240,8 @@ def simulate_scenario(
         )
         n_alone = n_servers
     res = engine.run(
-        x0, arrival_times, p_phys, rule, horizon=horizon, rel_tol=rel_tol
+        x0, arrival_times, p_phys, rule, horizon=horizon, rel_tol=rel_tol,
+        p_drift=scn.p_drift,
     )
     return _finalize(x0, arrival_times, res.completion_times, p_phys, n_alone)
 
@@ -324,11 +332,13 @@ def _sweep_fn(name, n_jobs, p, n_servers, size_alpha, metric, scenario,
     # Sort-free ranked scan where the policy allows it (heSRPT, EQUI,
     # SRPT — ~20x faster at M=1000); generic sort-per-event otherwise.
     # Estimation noise and chip quantization both break the carried-rank
-    # invariants, and scenarios that draw per-job exponents (``p_job``,
-    # the multi-class case) have rates that are not monotone in remaining
-    # size — all of those fall back to the generic sort-per-event path.
-    # (``scn.p_job is None`` is static per sampler, so the branch below is
-    # resolved at trace time, not per step.)
+    # invariants, scenarios that draw per-job exponents (``p_job``, the
+    # multi-class case) have rates that are not monotone in remaining
+    # size, and p-drift regime boundaries (``p_drift``) are events the
+    # ranked scan does not model — all of those fall back to the generic
+    # sort-per-event path.  (``scn.p_job``/``scn.p_drift`` are static per
+    # sampler, so the branch below is resolved at trace time, not per
+    # step.)
     rank_pol = make_rank_policy(name) if n_chips is None and not noisy else None
     pol = make_policy(
         name, n_servers=(n_chips if n_chips is not None else n_servers)
@@ -336,7 +346,7 @@ def _sweep_fn(name, n_jobs, p, n_servers, size_alpha, metric, scenario,
 
     def one(key, rate):
         scn = sampler(key, n_jobs, rate)
-        if rank_pol is not None and scn.p_job is None:
+        if rank_pol is not None and scn.p_job is None and scn.p_drift is None:
             res = simulate_online_ranked(
                 scn.x0, scn.arrival_times, p, n_servers, rank_pol
             )

@@ -7,11 +7,21 @@ regime — is the same loop: query an allocation rule at an event, advance
 every job linearly, repeat.  This module is that loop, written once as a
 single ``jax.lax.scan`` and parameterized along two axes:
 
-- **Allocation rule** (``AllocRule``): maps the remaining sizes of the
-  *arrived, unfinished* jobs to ``(alloc, rate)`` per job.  The speedup
-  exponent may be a scalar (the paper) or a per-job vector (multi-class
-  workloads, ``core/multiclass.py``); quantized rules can additionally
-  snap chip counts to power-of-two ICI slices (:func:`snap_to_slices_jax`).
+- **Allocation rule** (:class:`StatefulRule`): a triple ``(init, observe,
+  allocate)`` whose state threads through the event scan's carry.
+  ``allocate`` maps ``(state, x_active, p)`` to ``(alloc, rate)`` per job;
+  ``observe`` folds the epoch's realized :class:`Observation` (allocation,
+  throughput, epoch length) back into the state — which is what lets
+  *online estimation* (``core/estimation.py`` fits the speedup exponent
+  p̂ from observed throughput) run jit-safe inside the scan instead of on
+  a per-event Python loop.  A plain callable ``(x_active, p) -> (alloc,
+  rate)`` is accepted everywhere and wrapped by :func:`as_stateful` into
+  the trivial stateless instance (empty state, identity ``observe``) —
+  with trivial state the scan is bit-for-bit the pre-stateful engine.
+  The speedup exponent may be a scalar (the paper) or a per-job vector
+  (multi-class workloads, ``core/multiclass.py``); quantized rules can
+  additionally snap chip counts to power-of-two ICI slices
+  (:func:`snap_to_slices_jax`).
 
   * :func:`continuous_rule` — the paper's continuously-divisible system:
     ``theta`` from any ``core/policies.py`` policy, rate ``s(theta_i N)``.
@@ -43,7 +53,7 @@ Everything is jit-able and vmap-able over seeds/loads/configs.
 from __future__ import annotations
 
 from collections.abc import Callable
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +66,74 @@ from repro.core.policies import Policy
 # ``p`` may be a scalar (single class) or a per-job vector (multi-class, in
 # the engine's arrival-sorted order — see :func:`run`).
 AllocRule = Callable[[jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+
+
+class Observation(NamedTuple):
+    """What an allocation rule gets to see after each epoch.
+
+    The fluid model's observable is exactly what a production scheduler
+    measures between decision epochs: which allocation each job held
+    (``alloc`` — theta for continuous rules, integer chips for quantized
+    ones), the realized throughput (``rate`` = work done / wall time, the
+    fluid service rate), and for how long (``dt``).  ``active`` marks the
+    jobs that were present and unfinished during the epoch; rules must
+    ignore inactive rows.
+    """
+
+    alloc: jax.Array  # [M] allocation held during the epoch
+    rate: jax.Array  # [M] realized service rate (work per unit time)
+    dt: jax.Array  # scalar epoch length (0 on no-op steps)
+    active: jax.Array  # [M] bool, job arrived & unfinished this epoch
+
+
+class StatefulRule(NamedTuple):
+    """An allocation rule with scan-carried state: ``(init, observe,
+    allocate)``.
+
+    ``init()`` builds the state pytree; ``allocate(state, x_active, p)``
+    returns ``(alloc, rate)`` for the epoch; ``observe(state, obs)`` folds
+    the epoch's :class:`Observation` back into the state.  The stateless
+    rules (:func:`continuous_rule`, :func:`quantized_rule`) are the trivial
+    instances via :func:`as_stateful`; ``core/estimation.py`` builds the
+    estimating instances (online p̂ from observed throughput).
+    """
+
+    init: Callable[[], Any]
+    observe: Callable[[Any, Observation], Any]
+    allocate: Callable[[Any, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+
+
+def as_stateful(rule: AllocRule | StatefulRule) -> StatefulRule:
+    """Wrap a plain ``(x_active, p) -> (alloc, rate)`` callable as the
+    trivial :class:`StatefulRule` (empty state, identity ``observe``) —
+    the wrapped scan runs the exact same ops, so stateless trajectories
+    are bit-for-bit unchanged.  Already-stateful rules pass through."""
+    if isinstance(rule, StatefulRule):
+        return rule
+    return StatefulRule(
+        init=lambda: (),
+        observe=lambda state, obs: state,
+        allocate=lambda state, x_act, p: rule(x_act, p),
+    )
+
+
+class PDrift(NamedTuple):
+    """Piecewise-constant true speedup exponent: regime changes mid-run.
+
+    ``times`` are the ``D`` regime-change epochs (ascending); ``values``
+    holds the ``D + 1`` regimes — scalars (shape ``[D+1]``) or per-job
+    rows (shape ``[D+1, M]``, input job order; :func:`run` permutes the
+    columns into arrival-sorted order).  Between ``times[r-1]`` and
+    ``times[r]`` the *physics* (and the ``p`` an allocation rule is shown)
+    use ``values[r]`` — e.g. a job set turning communication-bound has its
+    effective ``p`` drop.  A stale scheduler keeps allocating with the old
+    exponent; an online estimator (``core/estimation.py``) re-fits it from
+    observed throughput.  ``core/scenarios.py``'s drift scenarios draw
+    these.
+    """
+
+    times: jax.Array  # [D] regime-change epochs, ascending
+    values: jax.Array  # [D+1] or [D+1, M] exponent per regime
 
 # Power-of-two ICI-friendly slice sizes shared with ``sched.quantize``'s
 # ``snap_to_slices`` NumPy oracle (single source of truth lives here so the
@@ -144,13 +222,14 @@ def run(
     x0: jax.Array,
     arrival_times: jax.Array,
     p,
-    rule: AllocRule,
+    rule: AllocRule | StatefulRule,
     *,
     pre_arrived: bool = False,
     horizon: int | None = None,
     rel_tol: float = 1e-9,
     t0=0.0,
     record: bool = False,
+    p_drift: PDrift | None = None,
 ) -> EngineResult:
     """Run the event-driven fluid trajectory to completion in one scan.
 
@@ -160,6 +239,13 @@ def run(
     has at most ``2M`` events (``M`` with ``pre_arrived=True``, at least one
     job departing per step for work-conserving rules), which bounds the scan
     length; steps after the last event are no-ops.
+
+    ``rule`` is a :class:`StatefulRule` or a plain ``(x_active, p) ->
+    (alloc, rate)`` callable (wrapped via :func:`as_stateful`; bit-for-bit
+    the stateless scan).  A stateful rule's state rides in the scan carry:
+    each step calls ``allocate`` on the epoch-start state and ``observe``
+    on the realized epoch, so estimators update once per event — the same
+    observation schedule a per-event scheduler loop would produce.
 
     ``pre_arrived=True`` marks every job as already present (the batch
     case): ``arrival_times`` then only defines the job order and flow-time
@@ -173,10 +259,18 @@ def run(
     engine's arrival-sorted order alongside the sizes before it reaches
     ``rule`` — rule closures over per-job vectors (weights, noise factors)
     must be pre-sorted the same way by the caller.
+
+    ``p_drift`` makes the *true* exponent piecewise-constant in time
+    (:class:`PDrift`; it then supersedes ``p``): regime boundaries become
+    events of their own — ``dt`` is clamped so no epoch straddles one, the
+    next epoch re-queries the rule under the new exponent — which costs at
+    most one extra scan step per boundary (the default horizon accounts
+    for them).
     """
     x0 = jnp.asarray(x0)
     M = x0.shape[0]
-    E = (M if pre_arrived else 2 * M) if horizon is None else horizon
+    n_drift = 0 if p_drift is None else p_drift.times.shape[0]
+    E = ((M if pre_arrived else 2 * M) + n_drift) if horizon is None else horizon
     dtype = jnp.result_type(x0.dtype, jnp.float32)
     x0 = x0.astype(dtype)
     arrival_times = jnp.asarray(arrival_times).astype(dtype)
@@ -188,40 +282,66 @@ def run(
     xs = x0[order]
     if jnp.ndim(p) >= 1:  # per-job exponents travel with their jobs
         p = jnp.asarray(p)[order]
+    if p_drift is not None:
+        drift_t = jnp.asarray(p_drift.times).astype(dtype)
+        drift_v = jnp.asarray(p_drift.values).astype(dtype)
+        if drift_v.ndim == 2:  # per-job regime rows travel with their jobs
+            drift_v = drift_v[:, order]
     idx = jnp.arange(M)
     i0 = jnp.asarray(M if pre_arrived else 0, jnp.int32)
+    srule = as_stateful(rule)
 
     def body(carry, _):
-        x, t, i, times = carry
+        x, t, i, times, st = carry
         active = (idx < i) & (x > 0)
         x_act = jnp.where(active, x, 0.0)
-        alloc, rate = rule(x_act, p)
+        if p_drift is None:
+            p_now = p
+            dt_drift = jnp.inf
+            t_next_drift = jnp.inf
+        else:
+            r = jnp.searchsorted(drift_t, t, side="right")
+            p_now = drift_v[r]
+            n_d = drift_t.shape[0]
+            t_next_drift = jnp.where(
+                r < n_d, drift_t[jnp.minimum(r, n_d - 1)], jnp.inf
+            )
+            dt_drift = jnp.maximum(t_next_drift - t, 0.0)
+        alloc, rate = srule.allocate(st, x_act, p_now)
         tt = jnp.where(active & (rate > 0), x / rate, jnp.inf)
         dt_dep = jnp.min(tt)  # inf when nothing is active
         t_next_arr = jnp.where(i < M, arr[jnp.minimum(i, M - 1)], jnp.inf)
         dt_arr = jnp.maximum(t_next_arr - t, 0.0)
-        dt = jnp.minimum(dt_dep, dt_arr)
+        dt = jnp.minimum(jnp.minimum(dt_dep, dt_arr), dt_drift)
         any_event = jnp.isfinite(dt)
         dt = jnp.where(any_event, dt, 0.0)
         # Landing on an arrival pins t to the exact arrival time so the
-        # searchsorted admission below cannot miss it to float rounding.
-        admit = any_event & (dt_arr <= dt_dep)
-        t_new = jnp.where(admit, t_next_arr, t + dt)
+        # searchsorted admission below cannot miss it to float rounding
+        # (same for a drift boundary: the next epoch's regime lookup uses
+        # side="right", so t == boundary already reads the new exponent).
+        admit = any_event & (dt_arr <= jnp.minimum(dt_dep, dt_drift))
+        take_dep = any_event & (dt_dep <= jnp.minimum(dt_arr, dt_drift))
+        take_drift = any_event & ~admit & ~take_dep
+        t_new = jnp.where(
+            admit, t_next_arr, jnp.where(take_drift, t_next_drift, t + dt)
+        )
         x_new = jnp.where(active, x - dt * rate, x)
         # The argmin job departs BY CONSTRUCTION when the departure is the
         # next event; float residue (~eps*x) must not be allowed to keep it.
-        take_dep = any_event & (dt_dep <= dt_arr)
         departing = (idx == jnp.argmin(tt)) & active & take_dep
         x_new = jnp.where(departing | (active & (x_new <= tol)), 0.0, x_new)
         newly_done = active & (x_new == 0.0)
         times = jnp.where(newly_done, t_new, times)
         i_new = jnp.searchsorted(arr, t_new, side="right").astype(i.dtype)
         i_new = jnp.maximum(i, i_new)  # monotone even on no-op steps
+        st_new = srule.observe(
+            st, Observation(alloc=alloc, rate=rate, dt=dt, active=active)
+        )
         out = (alloc, t, x) if record else None
-        return (x_new, t_new, i_new, times), out
+        return (x_new, t_new, i_new, times, st_new), out
 
-    init = (xs, jnp.asarray(t0, dtype), i0, jnp.zeros(M, dtype))
-    (x_fin, _, _, times), ys = jax.lax.scan(body, init, None, length=E)
+    init = (xs, jnp.asarray(t0, dtype), i0, jnp.zeros(M, dtype), srule.init())
+    (x_fin, _, _, times, _), ys = jax.lax.scan(body, init, None, length=E)
     # Safety: any job that never departed (pathological rule) -> inf.
     times = jnp.where(x_fin > 0, jnp.inf, times)
     times_in = jnp.zeros(M, dtype).at[order].set(times)  # back to input order
@@ -504,6 +624,10 @@ __all__ = [
     "DEFAULT_SLICES",
     "EngineResult",
     "EngineTrace",
+    "Observation",
+    "PDrift",
+    "StatefulRule",
+    "as_stateful",
     "continuous_rule",
     "quantize_allocation_jax",
     "quantized_rule",

@@ -1,0 +1,389 @@
+"""Online speedup-exponent estimation as a scan-carried rule state.
+
+The paper assumes the speedup exponent ``p`` of ``s(k) = k^p`` is known a
+priori; production fits it from observed throughput (Li et al. 2025 study
+allocation when the speedup curve is known only approximately — exactly
+the regime this module simulates).  ``sched/estimator.py`` does that fit
+as a per-event NumPy loop over an explicit ``(log k, log T, weight)``
+history; this module is its JAX port, rewritten as **closed-form recursive
+weighted least squares over sufficient statistics** so the update is O(1)
+per observation and jit-safe inside the engine's event scan
+(``core/engine.py``): with ``s(k) = c k^p``, every observation satisfies
+``log T = log c + p log k``, and the discounted WLS slope needs only the
+running moments ``(Σw, Σw·lk, Σw·lt, Σw·lk², Σw·lk·lt)`` per job.
+
+The fit matches the (fixed) NumPy estimator's ridge blend exactly: the
+slope is pulled toward the prior with strength ``prior_weight``,
+
+    p̂ = (cov + prior_weight · prior_p) / (var + prior_weight + 1e-12)
+
+which equals ``α·OLS + (1-α)·prior`` with ``α = var/(var+prior_weight)``
+— the blend-by-effective-sample-size the NumPy docstring promises.
+Exponential ``discount`` (applied to a job's past moments each time *that
+job* observes, the NumPy semantics) lets p̂ track regime changes
+(:class:`~repro.core.engine.PDrift`).
+
+Three read-outs, all pure functions of an :class:`EstState`:
+
+- :func:`p_hat_jobs` — per-job p̂ (the NumPy ``SpeedupEstimator.p_hat``);
+- :func:`blended_p_hat` — the work-weighted scalar blend heSRPT needs
+  (``sched.estimator.blended_p``);
+- :func:`p_hat_classes` — per-class p̂ from *pooled* class statistics
+  (all jobs of a class share one exponent, so pooling their sufficient
+  statistics is the exact WLS on the concatenated histories — the NumPy
+  twin is ``sched.estimator.pooled_p_hat``).
+
+On top sit the two stateful engine rules: :func:`estimating_rule`
+(single-class policies see the blended p̂) and
+:func:`estimating_class_rule` (``core/multiclass.py`` policies see the
+per-class p̂ vector).  Both allocate with the *estimate* while the engine
+physics keep the true exponent — the scheduler can be wrong, the hardware
+isn't.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.flowtime import speedup
+from repro.core.policies import Policy
+
+#: Clip bounds shared with the NumPy estimator (p=0 and p=1 are both
+#: degenerate for the Thm-7 brackets).
+P_CLIP = (0.01, 0.999)
+
+
+class EstState(NamedTuple):
+    """Per-job sufficient statistics of the discounted log-log WLS.
+
+    All arrays are shape ``[M]`` in the engine's arrival-sorted job order.
+    ``n`` counts raw observations (undiscounted) — the fit falls back to
+    the prior until a job has two, matching the NumPy estimator.
+    """
+
+    n: jax.Array  # [M] int32 observation counts
+    s_w: jax.Array  # [M] Σ w
+    s_k: jax.Array  # [M] Σ w · log k
+    s_t: jax.Array  # [M] Σ w · log T
+    s_kk: jax.Array  # [M] Σ w · (log k)²
+    s_kt: jax.Array  # [M] Σ w · log k · log T
+
+
+def init_est_state(n_jobs: int, dtype=jnp.float64) -> EstState:
+    z = jnp.zeros(n_jobs, dtype)
+    return EstState(
+        n=jnp.zeros(n_jobs, jnp.int32), s_w=z, s_k=z, s_t=z, s_kk=z, s_kt=z
+    )
+
+
+def est_state_from_history(histories, dtype=jnp.float64) -> EstState:
+    """Host-side constructor: fold existing NumPy estimator histories
+    (lists of ``(log k, log T, weight)`` per job) into an :class:`EstState`
+    — how ``sched/cluster.py`` seeds the engine when jobs have already
+    observed throughput through ``report_progress``."""
+    import numpy as np
+
+    M = len(histories)
+    n = np.zeros(M, np.int32)
+    s = np.zeros((5, M), np.float64)
+    for j, hist in enumerate(histories):
+        for lk, lt, w in hist:
+            n[j] += 1
+            s[:, j] += (w, w * lk, w * lt, w * lk * lk, w * lk * lt)
+    return EstState(
+        n=jnp.asarray(n),
+        s_w=jnp.asarray(s[0], dtype),
+        s_k=jnp.asarray(s[1], dtype),
+        s_t=jnp.asarray(s[2], dtype),
+        s_kk=jnp.asarray(s[3], dtype),
+        s_kt=jnp.asarray(s[4], dtype),
+    )
+
+
+def observe_throughput(
+    state: EstState, obs: engine.Observation, *, discount=1.0
+) -> EstState:
+    """Fold one epoch's ``(alloc, rate)`` into the running moments.
+
+    Mirrors ``SpeedupEstimator.observe``: a job only observes when it held
+    a positive allocation and made positive progress (``alloc > 0`` and
+    ``rate > 0`` — queued jobs learn nothing), and only *its* past moments
+    are discounted when it does.  No-op epochs (``dt == 0``) observe
+    nothing; the observed throughput is the fluid rate itself (work done /
+    epoch length), independent of the epoch's duration, so every new
+    sample enters with weight 1 exactly as in the NumPy history.
+    """
+    ok = obs.active & (obs.alloc > 0) & (obs.rate > 0) & (obs.dt > 0)
+    lk = jnp.log(jnp.where(obs.alloc > 0, obs.alloc, 1.0).astype(state.s_w.dtype))
+    lt = jnp.log(jnp.where(obs.rate > 0, obs.rate, 1.0).astype(state.s_w.dtype))
+    d = jnp.where(ok, jnp.asarray(discount, state.s_w.dtype), 1.0)
+    okf = ok.astype(state.s_w.dtype)
+    return EstState(
+        n=state.n + ok.astype(jnp.int32),
+        s_w=state.s_w * d + okf,
+        s_k=state.s_k * d + okf * lk,
+        s_t=state.s_t * d + okf * lt,
+        s_kk=state.s_kk * d + okf * lk * lk,
+        s_kt=state.s_kt * d + okf * lk * lt,
+    )
+
+
+def _ridge_slope(n, s_w, s_k, s_t, s_kk, s_kt, prior_p, prior_weight):
+    """The fixed ridge fit on raw moments (see module docstring): falls
+    back to the prior with <2 samples or an unidentifiable design (all
+    samples at one allocation)."""
+    s_w_safe = jnp.maximum(s_w, jnp.finfo(s_w.dtype).tiny)
+    var = s_kk - s_k * (s_k / s_w_safe)
+    cov = s_kt - s_k * (s_t / s_w_safe)
+    slope = (cov + prior_weight * prior_p) / (var + prior_weight + 1e-12)
+    p = jnp.clip(slope, *P_CLIP)
+    return jnp.where((n >= 2) & (var >= 1e-12), p, prior_p)
+
+
+def p_hat_jobs(state: EstState, prior_p, *, prior_weight=1.0) -> jax.Array:
+    """Per-job p̂, shape ``[M]`` (the jit-safe ``SpeedupEstimator.p_hat``).
+
+    ``prior_p``/``prior_weight`` broadcast: scalars or per-job vectors in
+    the same (arrival-sorted) job order as the state.
+    """
+    return _ridge_slope(
+        state.n, state.s_w, state.s_k, state.s_t, state.s_kk, state.s_kt,
+        jnp.asarray(prior_p, state.s_w.dtype), prior_weight,
+    )
+
+
+def blended_p_hat(
+    state: EstState, x_act: jax.Array, prior_p, *, prior_weight=1.0
+) -> jax.Array:
+    """Work-weighted scalar blend of the active jobs' p̂ — what a
+    single-exponent policy (heSRPT) acts on (``sched.estimator.blended_p``
+    with the remaining sizes as weights; inactive jobs have ``x_act == 0``
+    and drop out)."""
+    ps = p_hat_jobs(state, prior_p, prior_weight=prior_weight)
+    wsum = jnp.sum(x_act)
+    return jnp.sum(ps * x_act) / jnp.maximum(wsum, jnp.finfo(x_act.dtype).tiny)
+
+
+def pool_by_class(
+    state: EstState, class_ids: jax.Array, n_classes: int
+) -> EstState:
+    """Sum per-job sufficient statistics into per-class ``[K]`` stats."""
+
+    def pool(a):
+        return jax.ops.segment_sum(a, class_ids, num_segments=n_classes)
+
+    return EstState(*(pool(f) for f in state))
+
+
+def p_hat_classes(
+    state: EstState,
+    class_ids: jax.Array,
+    n_classes: int,
+    prior_p,
+    *,
+    prior_weight=1.0,
+    base: EstState | None = None,
+) -> jax.Array:
+    """Per-class p̂, shape ``[K]``, from class-pooled sufficient statistics.
+
+    Jobs of one class share one true exponent, so the right estimator is
+    the WLS over their *concatenated* histories — which is exactly the sum
+    of their sufficient statistics.  ``class_ids`` must be in the state's
+    (arrival-sorted) job order; ``prior_p``/``prior_weight`` are scalars
+    or per-class ``[K]`` vectors.  ``base`` adds already-pooled ``[K]``
+    stats for jobs *outside* the state — departed jobs keep contributing
+    (observations don't expire with their job), which is how
+    ``sched/cluster.py`` carries earlier runs' observations into a
+    delegated run.
+    """
+    pooled = pool_by_class(state, class_ids, n_classes)
+    if base is not None:
+        pooled = EstState(*(a + b for a, b in zip(pooled, base, strict=True)))
+    return _ridge_slope(
+        pooled.n, pooled.s_w, pooled.s_k, pooled.s_t, pooled.s_kk,
+        pooled.s_kt, jnp.asarray(prior_p, state.s_w.dtype), prior_weight,
+    )
+
+
+# ------------------------------------------------------ the stateful rules
+def _rule_parts(n_alloc, n_chips, min_chips, snap_slices, dtype, discount):
+    """The allocate tail (theta -> alloc, true-p rate) and the observe
+    closure shared by both estimating rules — ONE implementation so the
+    single-class and class-aware paths cannot desynchronize on
+    quantization order or the observation's chip unit."""
+
+    def finish(theta, p):
+        theta = theta.astype(dtype)
+        if n_chips is None:
+            return theta, speedup(theta * n_alloc, p)
+        chips = engine.quantize_allocation_jax(theta, n_chips, min_chips=min_chips)
+        if snap_slices:
+            chips = engine.snap_to_slices_jax(chips, n_chips)
+        return chips, speedup(chips.astype(dtype), p)
+
+    def observe(state, obs):
+        # Continuous rules allocate theta; the estimator regresses on the
+        # chip count theta * N (what the NumPy path stores in Job.chips).
+        alloc = obs.alloc if n_chips is not None else obs.alloc * n_alloc
+        return observe_throughput(
+            state, obs._replace(alloc=alloc), discount=discount
+        )
+
+    return finish, observe
+
+
+def estimating_rule(
+    policy: Policy,
+    n_servers,
+    *,
+    prior_p,
+    prior_weight=1.0,
+    discount=1.0,
+    dtype,
+    n_jobs: int | None = None,
+    n_chips: int | None = None,
+    min_chips: int = 1,
+    snap_slices: bool = False,
+    init_state: EstState | None = None,
+) -> engine.StatefulRule:
+    """Single-class estimating rule: the policy sees the blended p̂, the
+    physics keep the true (possibly per-job, possibly drifting) ``p``.
+
+    Continuous when ``n_chips`` is None (``alloc`` is theta, the observed
+    "chips" are ``theta * n_servers``), whole chips otherwise (the
+    ``ClusterScheduler`` decision epoch with online estimation — the
+    regime that used to force the per-event Python loop).  ``prior_p`` and
+    ``prior_weight`` may be per-job vectors in arrival-sorted order;
+    ``init_state`` seeds pre-existing observation history (defaults to
+    empty, sized by ``n_jobs``).
+    """
+    if init_state is None:
+        if n_jobs is None:
+            raise ValueError("estimating_rule needs n_jobs or init_state")
+        init_state = init_est_state(n_jobs, dtype)
+    n_alloc = float(n_chips) if n_chips is not None else float(n_servers)
+    finish, observe = _rule_parts(
+        n_alloc, n_chips, min_chips, snap_slices, dtype, discount
+    )
+
+    def allocate(state, x_act, p):
+        p_seen = blended_p_hat(state, x_act, prior_p, prior_weight=prior_weight)
+        return finish(policy(x_act, p_seen), p)
+
+    return engine.StatefulRule(
+        init=lambda: init_state, observe=observe, allocate=allocate
+    )
+
+
+def estimating_class_rule(
+    name: str,
+    *,
+    class_ids: jax.Array,
+    n_classes: int,
+    prior_p,
+    prior_weight=1.0,
+    discount=1.0,
+    dtype,
+    n_servers: float | None = None,
+    n_chips: int | None = None,
+    min_chips: int = 1,
+    snap_slices: bool = False,
+    w: jax.Array | None = None,
+    init_state: EstState | None = None,
+    base_class_state: EstState | None = None,
+) -> engine.StatefulRule:
+    """Class-aware estimating rule: ``core/multiclass.py`` policies see the
+    per-class p̂ vector (pooled statistics, mapped back to jobs through
+    ``class_ids``), the physics keep each job's true exponent.
+
+    ``class_ids``/``w`` follow the usual contract: per-job vectors in the
+    engine's arrival-sorted order.  ``prior_p``/``prior_weight`` are
+    per-class ``[K]`` (or scalar).  ``base_class_state`` folds in
+    already-pooled ``[K]`` statistics of jobs that are NOT in this run
+    (e.g. departed jobs of an earlier ``ClusterScheduler`` run, whose
+    observations still inform their class's p̂).
+    """
+    from repro.core.multiclass import class_theta
+
+    if init_state is None:
+        init_state = init_est_state(class_ids.shape[0], dtype)
+    n_alloc = float(n_chips) if n_chips is not None else float(n_servers)
+    finish, observe = _rule_parts(
+        n_alloc, n_chips, min_chips, snap_slices, dtype, discount
+    )
+
+    def allocate(state, x_act, p):
+        p_k = p_hat_classes(
+            state, class_ids, n_classes, prior_p,
+            prior_weight=prior_weight, base=base_class_state,
+        )
+        p_seen = p_k[class_ids]
+        return finish(class_theta(name, x_act, p_seen, n_servers=n_alloc, w=w), p)
+
+    return engine.StatefulRule(
+        init=lambda: init_state, observe=observe, allocate=allocate
+    )
+
+
+def simulate_scenario_estimated(
+    scn,
+    p,
+    n_servers,
+    policy: Policy,
+    *,
+    prior_p,
+    prior_weight=1.0,
+    discount=1.0,
+    n_chips: int | None = None,
+    min_chips: int = 1,
+    rel_tol: float = 1e-9,
+    horizon: int | None = None,
+):
+    """Run a drawn :class:`~repro.core.scenarios.Scenario` with the
+    estimator in the loop: the policy allocates with the blended p̂ fit
+    online from observed throughput, while the physics use the scenario's
+    true exponent — per-job ``scn.p_job`` and/or the piecewise drift
+    ``scn.p_drift`` (the regime only an online estimator can track).
+
+    The estimator-free arms of the same comparison (oracle-p, stale-p)
+    are ``arrivals.simulate_scenario`` with/without a pinned ``p_hat`` —
+    see ``benchmarks/estimation.py``.
+    """
+    from repro.core.arrivals import _finalize
+
+    x0 = jnp.asarray(scn.x0)
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arr = jnp.asarray(scn.arrival_times).astype(dtype)
+    p_phys = p if scn.p_job is None else jnp.asarray(scn.p_job, dtype)
+    rule = estimating_rule(
+        policy, n_servers, prior_p=prior_p, prior_weight=prior_weight,
+        discount=discount, dtype=dtype, n_jobs=x0.shape[0], n_chips=n_chips,
+        min_chips=min_chips,
+    )
+    res = engine.run(
+        x0, arr, p_phys, rule, horizon=horizon, rel_tol=rel_tol,
+        p_drift=scn.p_drift,
+    )
+    n_alone = n_chips if n_chips is not None else n_servers
+    return _finalize(x0, arr, res.completion_times, p_phys, n_alone)
+
+
+__all__ = [
+    "EstState",
+    "P_CLIP",
+    "blended_p_hat",
+    "est_state_from_history",
+    "estimating_class_rule",
+    "estimating_rule",
+    "init_est_state",
+    "observe_throughput",
+    "p_hat_classes",
+    "p_hat_jobs",
+    "pool_by_class",
+    "simulate_scenario_estimated",
+]

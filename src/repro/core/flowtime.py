@@ -1,8 +1,9 @@
-"""Closed forms from the paper: Theorem 2 (makespan) and Theorem 8 (flow time).
+"""Closed forms: Theorem 2 (makespan), Theorem 8 (flow time), and the
+weighted Thm-8 analogue behind Berg et al. 2020's mean-slowdown objective.
 
 These are the ground truth the event-driven simulator is validated against
-(tests/test_flowtime.py) and the scheduler uses for instant what-if
-evaluation of job sets without simulating.
+(tests/test_flowtime.py, benchmarks/theorem8.py) and the scheduler uses
+for instant what-if evaluation of job sets without simulating.
 """
 
 from __future__ import annotations
@@ -51,6 +52,77 @@ def hesrpt_mean_flowtime(
     x_desc: jax.Array, p: jax.Array, n_servers: jax.Array
 ) -> jax.Array:
     return hesrpt_total_flowtime(x_desc, p, n_servers) / x_desc.shape[0]
+
+
+def omega_weighted(w: jax.Array, p: jax.Array) -> jax.Array:
+    """Scale-free constants of the *weighted* bracket policy.
+
+    Generalizes :func:`omega_star` from count fractions to cumulative
+    weight fractions: with jobs ranked ``k = 1..m`` largest..smallest and
+    ``W_k = w_1 + ... + w_k``,
+
+        omega_k = W_{k-1}^c / (W_k^c - W_{k-1}^c),      c = 1/(1-p)
+
+    which is the constant ratio ``sum_{j<k} theta_j / theta_k`` during job
+    k's lifetime under :func:`~repro.core.policies.weighted_hesrpt` (the
+    Thm-4 scale-free property survives weighting because the brackets
+    depend on ``m`` only through the common factor ``W_m^{-c}``).
+    Uniform weights reduce to :func:`omega_star` exactly.
+    """
+    w = jnp.asarray(w)
+    c = 1.0 / (1.0 - p)
+    W = jnp.cumsum(w)
+    W_lo = W - w
+    gap = jnp.maximum(W ** c - W_lo ** c, jnp.finfo(W.dtype).tiny)
+    return W_lo ** c / gap
+
+
+def weighted_total_flowtime(
+    x_desc: jax.Array, w: jax.Array, p: jax.Array, n_servers: jax.Array
+) -> jax.Array:
+    """Weighted Thm-8 analogue: ``sum_k w_k T_k`` under the weighted
+    bracket policy (:func:`~repro.core.policies.weighted_hesrpt`), in
+    closed form::
+
+        sum_k w_k T_k = (1/s(N)) * sum_k x_k (W_k^c - W_{k-1}^c)^(1-p)
+
+    with ``c = 1/(1-p)``, jobs ranked largest..smallest (``x_desc``), and
+    ``W_k`` the cumulative weight down the ranking.  Equivalently (the
+    Thm-8 shape) the k-th coefficient is ``W_k s(1+omega_k) - W_{k-1}
+    s(omega_k)`` with the :func:`omega_weighted` constants — the two forms
+    collapse because ``1 + c p = c``.  Uniform weights recover Theorem 8's
+    optimal total flow time exactly.
+
+    Valid when departures follow the size ranking (smallest remaining job
+    first), which holds whenever weights are non-increasing in size —
+    in particular the Berg et al. 2020 slowdown weights ``w = 1/x``.
+    Validated against the event-driven simulator in tests/test_flowtime.py
+    and benchmarks/theorem8.py.
+    """
+    w = jnp.asarray(w, x_desc.dtype)
+    c = 1.0 / (1.0 - p)
+    W = jnp.cumsum(w)
+    W_lo = W - w
+    return jnp.sum(x_desc * (W ** c - W_lo ** c) ** (1.0 - p)) / speedup(
+        n_servers, p
+    )
+
+
+def hesrpt_sd_mean_slowdown(
+    x_desc: jax.Array, p: jax.Array, n_servers: jax.Array
+) -> jax.Array:
+    """Berg et al. 2020's batch objective in closed form: the mean slowdown
+    achieved by the slowdown-weighted policy (``hesrpt_sd``, i.e.
+    :func:`weighted_total_flowtime` with weights ``w = 1/x``).
+
+    Slowdown of job k is ``T_k / (x_k / s(N))``, so the mean is
+    ``s(N)/M * sum_k T_k / x_k`` — the weighted total with ``w_k = 1/x_k``
+    rescaled by ``s(N)/M``.  This is the validation oracle for the
+    ``hesrpt_sd`` simulation path (``core/multiclass.py``).
+    """
+    M = x_desc.shape[0]
+    total = weighted_total_flowtime(x_desc, 1.0 / x_desc, p, n_servers)
+    return total * speedup(n_servers, p) / M
 
 
 def optimal_makespan(x: jax.Array, p: jax.Array, n_servers: jax.Array) -> jax.Array:

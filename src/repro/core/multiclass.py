@@ -320,6 +320,7 @@ def simulate_multiclass(
     snap_slices: bool = False,
     rel_tol: float = 1e-9,
     horizon: int | None = None,
+    estimator_kw: dict | None = None,
 ) -> OnlineSimResult:
     """Run a multi-class scenario through the unified engine.
 
@@ -328,6 +329,15 @@ def simulate_multiclass(
     through the usual estimation-noise channel (``scn.size_factors`` /
     ``scn.p_hat``).  ``n_chips`` switches to whole-chips allocation,
     ``snap_slices`` additionally restricts jobs to power-of-two slices.
+
+    ``estimator_kw`` switches the policy's exponents from the drawn truth
+    to *online estimates*: the engine runs the stateful
+    ``estimation.estimating_class_rule`` — per-class p̂_k recursively fit
+    from observed throughput inside the scan, priors and forgetting from
+    the dict (``prior_p`` per class, ``prior_weight``, ``discount``) —
+    while the physics keep ``scn.p_job``.  This is the class-aware
+    estimation regime (``ClusterScheduler(class_aware=True,
+    use_estimator=True)`` is its per-event oracle).
 
     **Class-blind reduction (static):** when ``classes`` is given and every
     class shares one exponent, ``hesrpt_pc``/``hesrpt_blind`` degenerate to
@@ -346,6 +356,7 @@ def simulate_multiclass(
     if (
         p_shared is not None
         and noiseless
+        and estimator_kw is None
         and policy.lower() in ("hesrpt", "hesrpt_pc", "hesrpt_blind")
         and not (n_chips is not None and snap_slices)
     ):
@@ -388,18 +399,42 @@ def simulate_multiclass(
     if w is not None:
         w = jnp.asarray(w, dtype)[order]
 
-    rule = class_rule(
-        policy,
-        n_servers=float(n_servers),
-        n_chips=n_chips,
-        min_chips=min_chips,
-        snap_slices=snap_slices,
-        dtype=dtype,
-        w=w,
-        size_factors=factors,
-        p_hat=p_hat,
+    if estimator_kw is not None:
+        from repro.core import estimation as est
+
+        if scn.class_ids is None:
+            raise ValueError("estimator_kw needs a multi-class scenario")
+        kw = dict(estimator_kw)
+        kw.setdefault("prior_p", jnp.mean(p_job))
+        rule = est.estimating_class_rule(
+            policy,
+            class_ids=jnp.asarray(scn.class_ids, jnp.int32)[order],
+            n_classes=len(specs) if specs is not None else
+            int(jnp.max(scn.class_ids)) + 1,
+            dtype=dtype,
+            n_servers=float(n_servers),
+            n_chips=n_chips,
+            min_chips=min_chips,
+            snap_slices=snap_slices,
+            w=w,
+            **kw,
+        )
+    else:
+        rule = class_rule(
+            policy,
+            n_servers=float(n_servers),
+            n_chips=n_chips,
+            min_chips=min_chips,
+            snap_slices=snap_slices,
+            dtype=dtype,
+            w=w,
+            size_factors=factors,
+            p_hat=p_hat,
+        )
+    res = engine.run(
+        x0, arr, p_job, rule, horizon=horizon, rel_tol=rel_tol,
+        p_drift=scn.p_drift,
     )
-    res = engine.run(x0, arr, p_job, rule, horizon=horizon, rel_tol=rel_tol)
     n_alone = n_chips if n_chips is not None else n_servers
     return _finalize(x0, arr, res.completion_times, p_job, n_alone)
 

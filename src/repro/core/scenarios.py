@@ -14,6 +14,13 @@ the workload the allocation engine (``core/engine.py``) is run against:
 - ``multiclass_poisson`` / ``multiclass_bursty`` — K-class mixtures with
   per-class speedup exponent, size distribution and arrival share; the
   samplers live in ``core/multiclass.py`` and register here lazily.
+- ``drift_poisson`` / ``drift_bursty`` — the estimation regime: the TRUE
+  speedup exponent changes mid-run (``p0`` → ``p1`` at ``drift_frac`` of
+  the stream's nominal span, e.g. the workload turning
+  communication-bound), carried as an ``engine.PDrift`` on the scenario.
+  An oracle scheduler re-reads the current truth, a stale one keeps
+  ``p0``; only an online estimator (``core/estimation.py``) can *track*
+  it — the three arms ``benchmarks/estimation.py`` compares.
 
 Every sampler accepts ``sigma_size``/``sigma_p`` estimation noise (scalars
 or per-class sequences): the returned ``size_factors`` (lognormal, median
@@ -35,6 +42,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import PDrift
+
 
 class Scenario(NamedTuple):
     """One drawn workload, in input (unsorted) job order.
@@ -44,6 +53,9 @@ class Scenario(NamedTuple):
     ``class_ids``/``p_job`` are ``None`` for single-class scenarios; the
     multi-class samplers (``core/multiclass.py``) fill them so every job
     carries its class id and its class's true speedup exponent.
+    ``p_drift`` (``engine.PDrift``) makes the true exponent
+    piecewise-constant in time — it then supersedes the scalar ``p`` the
+    simulation wrappers are called with.
     """
 
     x0: jax.Array  # [M] true job sizes
@@ -52,6 +64,7 @@ class Scenario(NamedTuple):
     p_hat: jax.Array | None = None  # scalar or [M]; policy sees p_hat
     class_ids: jax.Array | None = None  # [M] int32 job class ids
     p_job: jax.Array | None = None  # [M] per-job true speedup exponent
+    p_drift: PDrift | None = None  # piecewise-constant true exponent
 
 
 # A sampler draws a Scenario; ``rate`` is the sweep knob (arrivals per unit
@@ -182,11 +195,41 @@ def _bursty(key, n_jobs, rate, *, size_alpha, burst=4.0, p_stay=0.95):
     return Scenario(x0=x0, arrival_times=arr)
 
 
+def _with_drift(scn: Scenario, n_jobs, rate, *, p0, p1, drift_frac):
+    """Attach a single regime change ``p0 -> p1`` at ``drift_frac`` of the
+    stream's nominal span ``n_jobs / rate`` (the mean time to draw all
+    arrivals), so the drift lands mid-stream at every load of a sweep."""
+    dtype = scn.x0.dtype
+    t_d = jnp.asarray(drift_frac * n_jobs / rate, dtype)
+    drift = PDrift(
+        times=t_d[None], values=jnp.asarray([p0, p1], dtype)
+    )
+    return scn._replace(p_drift=drift)
+
+
+def _drift_poisson(
+    key, n_jobs, rate, *, size_alpha, p0=0.8, p1=0.3, drift_frac=0.5
+):
+    scn = _poisson(key, n_jobs, rate, size_alpha=size_alpha)
+    return _with_drift(scn, n_jobs, rate, p0=p0, p1=p1, drift_frac=drift_frac)
+
+
+def _drift_bursty(
+    key, n_jobs, rate, *, size_alpha, p0=0.8, p1=0.3, drift_frac=0.5,
+    burst=4.0, p_stay=0.95,
+):
+    scn = _bursty(key, n_jobs, rate, size_alpha=size_alpha, burst=burst,
+                  p_stay=p_stay)
+    return _with_drift(scn, n_jobs, rate, p0=p0, p1=p1, drift_frac=drift_frac)
+
+
 SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "batch": _batch,
     "poisson": _poisson,
     "deterministic": _deterministic,
     "bursty": _bursty,
+    "drift_poisson": _drift_poisson,
+    "drift_bursty": _drift_bursty,
 }
 
 

@@ -3,7 +3,7 @@ p-estimation, decision epochs, elastic resizing, straggler mitigation."""
 
 from repro.sched.cluster import ClusterScheduler, Job
 from repro.sched.elastic import ElasticClusterDriver, ElasticJob, ElasticJobConfig
-from repro.sched.estimator import SpeedupEstimator, blended_p
+from repro.sched.estimator import SpeedupEstimator, blended_p, pooled_p_hat
 from repro.sched.quantize import quantize_allocation, snap_to_slices
 from repro.sched.stragglers import StragglerDetector
 
@@ -16,6 +16,7 @@ __all__ = [
     "SpeedupEstimator",
     "StragglerDetector",
     "blended_p",
+    "pooled_p_hat",
     "quantize_allocation",
     "snap_to_slices",
 ]

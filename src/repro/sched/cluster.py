@@ -18,12 +18,19 @@ NumPy ``sched/quantize.py`` oracles used by the per-event path.
 ``class_aware=True`` is the multi-class regime: per-job speedup exponents,
 ``core.multiclass`` policies, per-job-``p`` fluid physics — this instance
 of the per-event loop is the NumPy oracle the multi-class engine path is
-cross-checked against (``benchmarks/multiclass.py``).  The per-event
-Python path (``allocations`` / ``advance_fluid``) remains both oracle and
-fallback for the remaining stateful features (speedup estimators,
-per-epoch KNEE alpha, heterogeneous p without ``class_aware``);
-``sched/elastic.py`` uses it to drive real training jobs through
-``report_progress``.
+cross-checked against (``benchmarks/multiclass.py``).  ``use_estimator=
+True`` is the online-estimation regime: the policy allocates with the
+blended (single-class) or per-class-pooled (class-aware) p-hat fit from
+observed throughput, while the fluid physics keep each job's true
+exponent; the engine runs it as a *stateful* allocation rule
+(``core/estimation.py`` — recursive WLS carried through the scan), with
+this per-event loop demoted to the cross-check oracle (flows agree to
+~1e-10 given the identical observation schedule: one observation per job
+per epoch, after the advance).  The per-event Python path
+(``allocations`` / ``advance_fluid``) remains both oracle and fallback
+for the remaining stateful feature (per-epoch KNEE alpha) and for
+heterogeneous p without ``class_aware``; ``sched/elastic.py`` uses it to
+drive real training jobs through ``report_progress``.
 """
 
 from __future__ import annotations
@@ -33,7 +40,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.policies import make_policy
-from repro.sched.estimator import SpeedupEstimator, blended_p
+from repro.sched.estimator import SpeedupEstimator, blended_p, pooled_p_hat
 from repro.sched.quantize import quantize_allocation, snap_to_slices
 
 
@@ -41,18 +48,22 @@ from repro.sched.quantize import quantize_allocation, snap_to_slices
 class Job:
     job_id: str
     size: float  # total work units (e.g. training steps x step cost)
-    p: float = 0.7  # prior speedup exponent
+    p: float = 0.7  # true speedup exponent (the fluid physics)
     remaining: float = -1.0
     arrival_time: float = 0.0
     chips: float = 0  # whole chips normally; fractional when quantize=False
     completion_time: float | None = None
     class_id: int = 0  # job class (multi-class workloads; 0 = default class)
+    # What the estimator believes before any observation.  None = the true
+    # p (the historical default); set it away from ``p`` to simulate a
+    # scheduler whose prior is stale/wrong.
+    prior_p: float | None = None
     estimator: SpeedupEstimator = field(default_factory=SpeedupEstimator)
 
     def __post_init__(self):
         if self.remaining < 0:
             self.remaining = self.size
-        self.estimator.prior_p = self.p
+        self.estimator.prior_p = self.p if self.prior_p is None else self.prior_p
 
 
 class ClusterScheduler:
@@ -68,6 +79,8 @@ class ClusterScheduler:
         rel_tol: float = 1e-9,
         class_aware: bool = False,
         class_weights: dict[int, float] | None = None,
+        est_discount: float = 1.0,
+        est_prior_weight: float = 1.0,
     ):
         self.n_chips = n_chips
         self.policy_name = policy
@@ -88,6 +101,12 @@ class ClusterScheduler:
         # NumPy oracle the multi-class engine path is cross-checked against.
         self.class_aware = class_aware
         self.class_weights = class_weights or {}
+        # Estimation knobs (use_estimator=True): exponential forgetting and
+        # ridge prior strength, applied to every job's estimator on
+        # admission so the table is uniform (per-job priors still come
+        # from ``Job.prior_p``).
+        self.est_discount = est_discount
+        self.est_prior_weight = est_prior_weight
         self.jobs: dict[str, Job] = {}
         self.time = 0.0
         self.events: list[dict] = []
@@ -95,6 +114,9 @@ class ClusterScheduler:
     # ------------------------------------------------------------- job table
     def add_job(self, job: Job) -> None:
         job.arrival_time = self.time
+        if self.use_estimator:
+            job.estimator.discount = self.est_discount
+            job.estimator.prior_weight = self.est_prior_weight
         self.jobs[job.job_id] = job
         self.events.append({"t": self.time, "event": "arrival", "job": job.job_id})
 
@@ -129,17 +151,50 @@ class ClusterScheduler:
         )
         return p_vec, w
 
+    def _class_priors(self):
+        """Per-class ridge prior (mean ``prior_p`` over the class's jobs)
+        and prior weight, for classes ``0..K-1`` over the WHOLE job table —
+        one definition shared by the per-event oracle and the engine
+        delegation, so the pooled fits agree."""
+        K = max(j.class_id for j in self.jobs.values()) + 1
+        prior_p, prior_w = [], []
+        for k in range(K):
+            ests = [j.estimator for j in self.jobs.values() if j.class_id == k]
+            prior_p.append(
+                float(np.mean([e.prior_p for e in ests])) if ests else 0.7
+            )
+            prior_w.append(
+                float(np.mean([e.prior_weight for e in ests])) if ests else 1.0
+            )
+        return K, prior_p, prior_w
+
+    def _class_p_hat(self, act: list[Job]) -> np.ndarray:
+        """Estimated per-job exponent vector for an active set: each job
+        gets its class's *pooled* p-hat (``sched.estimator.pooled_p_hat``
+        over every job of the class, departed ones included — observations
+        don't expire with their job)."""
+        K, prior_p, prior_w = self._class_priors()
+        p_k = np.empty(K)
+        for k in range(K):
+            ests = [j.estimator for j in self.jobs.values() if j.class_id == k]
+            p_k[k] = pooled_p_hat(ests, prior_p[k], prior_w[k])
+        return p_k[[j.class_id for j in act]]
+
     def _class_theta(self, act: list[Job]) -> np.ndarray:
         """Class-aware theta: the SAME jnp allocation function the engine's
         scan rule calls (``core.multiclass.class_theta``), on the per-job
         exponent vector — identical ops, identical bits, so the engine
-        cross-check can demand exact chips."""
+        cross-check can demand exact chips.  With ``use_estimator`` the
+        policy sees the per-class pooled p-hat instead of the truth (the
+        physics in ``job_rates`` keep each job's true exponent)."""
         import jax.numpy as jnp
 
         from repro.core import multiclass as mc
 
         x = jnp.asarray([j.remaining for j in act])
         p_vec, w = self._class_inputs(act, x.dtype)
+        if self.use_estimator:
+            p_vec = jnp.asarray(self._class_p_hat(act), x.dtype)
         theta = mc.class_theta(
             self.policy_name, x, p_vec, n_servers=float(self.n_chips), w=w
         )
@@ -197,10 +252,11 @@ class ClusterScheduler:
 
     # --------------------------------------------------------- fluid model
     def job_rates(self, act: list[Job]) -> np.ndarray:
-        """Per-job fluid service rates s(chips_j).  Class-aware mode uses
-        each job's own exponent (the true multi-class physics); the
+        """Per-job fluid service rates s(chips_j).  Class-aware and
+        estimator modes use each job's own TRUE exponent (the estimator
+        may be wrong about p, the physics never are); the plain
         single-class mode keeps the historical blended-p behaviour."""
-        if self.class_aware:
+        if self.class_aware or self.use_estimator:
             return np.array([max(j.chips, 0) ** j.p for j in act])
         p = self.effective_p()
         return np.array([max(j.chips, 0) ** p for j in act])
@@ -232,32 +288,43 @@ class ClusterScheduler:
             if j.remaining == 0 and j.completion_time is None:
                 j.completion_time = self.time
                 self.events.append({"t": self.time, "event": "depart", "job": j.job_id})
+        if self.use_estimator and step > 0:
+            # The observation schedule the engine's stateful rule mirrors:
+            # after each epoch, every job that held chips and made progress
+            # observes its realized fluid throughput (work/dt == rate).
+            for j, r in zip(act, rates, strict=True):
+                j.estimator.observe(j.chips, r)
         return step
 
     def _engine_eligible(self) -> bool:
-        """The engine models a pure (x, p) -> allocation rule: no online
-        estimator state and no per-epoch KNEE alpha refitting.  Slice
-        snapping is engine-native now (``snap_to_slices_jax``), and
-        ``class_aware`` instances delegate with the per-job exponent vector
-        (any p mix) as long as the policy is a pure ``core.multiclass``
-        rule; the single-class mode still needs uniform p (its blended-p
-        physics are not a pure per-job rule).  It also needs float64 JAX
-        (else the trajectory would silently drop to f32 and near-tie chip
-        decisions could flip vs the f64 NumPy oracle path) — callers
-        without ``jax_enable_x64`` get the Python loop."""
+        """The engine scans any rule expressible as ``(init, observe,
+        allocate)`` — since the stateful-rule refactor that includes the
+        online speedup estimator (``core/estimation.py``), so
+        ``use_estimator=True`` delegates too; only the per-epoch KNEE
+        alpha refit remains Python-only.  Slice snapping is engine-native
+        (``snap_to_slices_jax``), and ``class_aware`` instances delegate
+        with the per-job exponent vector (any p mix) as long as the policy
+        is a pure ``core.multiclass`` rule; the plain single-class mode
+        still needs uniform p (its blended-p physics are not a pure
+        per-job rule — the estimator mode has no such constraint, its
+        physics are per-job true p).  It also needs float64 JAX (else the
+        trajectory would silently drop to f32 and near-tie chip decisions
+        could flip vs the f64 NumPy oracle path) — callers without
+        ``jax_enable_x64`` get the Python loop."""
         import jax
 
         from repro.core.multiclass import MULTICLASS_POLICY_NAMES
 
         act = self.active_jobs()
-        if not (jax.config.jax_enable_x64 and not self.use_estimator):
+        if not jax.config.jax_enable_x64:
             return False
         if self.class_aware:
             return self.policy_name.lower() in MULTICLASS_POLICY_NAMES
-        return (
-            self.policy_name.lower() != "knee"
-            and len({j.p for j in act}) <= 1
-        )
+        if self.policy_name.lower() == "knee":
+            return False
+        if self.use_estimator:
+            return True  # per-job true-p physics: any p mix delegates
+        return len({j.p for j in act}) <= 1
 
     def _run_fluid_engine(self) -> dict:
         """One device call for the whole trajectory: delegate the epoch loop
@@ -271,6 +338,26 @@ class ClusterScheduler:
         ids = [j.job_id for j in act]
         x0 = jnp.asarray([j.remaining for j in act])
         dtype = jnp.result_type(x0.dtype, jnp.float32)
+        est_kw = {}
+        if self.use_estimator:
+            # Batch case: arrival sort is the identity, so the per-job
+            # estimator vectors in `act` order satisfy the stateful rule's
+            # sorted-order contract; pre-existing observation histories
+            # (report_progress) seed the sufficient statistics.
+            from repro.core import estimation as est
+
+            est_kw = dict(
+                prior_p=jnp.asarray([j.estimator.prior_p for j in act], dtype),
+                prior_weight=jnp.asarray(
+                    [j.estimator.prior_weight for j in act], dtype
+                ),
+                discount=jnp.asarray(
+                    [j.estimator.discount for j in act], dtype
+                ),
+                init_state=est.est_state_from_history(
+                    [j.estimator.history for j in act], dtype
+                ),
+            )
         if self.class_aware:
             from repro.core import multiclass as mc
 
@@ -278,24 +365,77 @@ class ClusterScheduler:
             # in `act` order satisfy the rule's sorted-order contract.
             p_arg, w = self._class_inputs(act, dtype)
             p = float(np.mean([j.p for j in act]))  # event-log annotation
-            rule = mc.class_rule(
-                self.policy_name,
-                n_servers=float(self.n_chips),
-                n_chips=self.n_chips if self.quantize else None,
-                min_chips=self.min_chips,
-                snap_slices=self.snap_slices,
-                dtype=dtype,
-                w=w,
-            )
+            if self.use_estimator:
+                from repro.core import estimation as est
+
+                K, prior_p_k, prior_w_k = self._class_priors()
+                # Departed jobs' observations still inform their class's
+                # pooled p-hat (exactly as the oracle's _class_p_hat pools
+                # the WHOLE job table): fold them in as static [K] stats.
+                inact = [j for j in self.jobs.values() if j.remaining <= 0]
+                base = None
+                if inact:
+                    base = est.pool_by_class(
+                        est.est_state_from_history(
+                            [j.estimator.history for j in inact], dtype
+                        ),
+                        jnp.asarray([j.class_id for j in inact], jnp.int32),
+                        K,
+                    )
+                rule = est.estimating_class_rule(
+                    self.policy_name,
+                    class_ids=jnp.asarray(
+                        [j.class_id for j in act], jnp.int32
+                    ),
+                    n_classes=K,
+                    prior_p=jnp.asarray(prior_p_k, dtype),
+                    prior_weight=jnp.asarray(prior_w_k, dtype),
+                    discount=est_kw["discount"],
+                    dtype=dtype,
+                    n_servers=float(self.n_chips),
+                    n_chips=self.n_chips if self.quantize else None,
+                    min_chips=self.min_chips,
+                    snap_slices=self.snap_slices,
+                    w=w,
+                    init_state=est_kw["init_state"],
+                    base_class_state=base,
+                )
+            else:
+                rule = mc.class_rule(
+                    self.policy_name,
+                    n_servers=float(self.n_chips),
+                    n_chips=self.n_chips if self.quantize else None,
+                    min_chips=self.min_chips,
+                    snap_slices=self.snap_slices,
+                    dtype=dtype,
+                    w=w,
+                )
         else:
-            p_arg = p = self.effective_p()
             pol = make_policy(self.policy_name, n_servers=float(self.n_chips))
-            if self.quantize:
+            if self.use_estimator:
+                from repro.core import estimation as est
+
+                # Physics: each job's true exponent; the rule allocates
+                # with the blended p-hat it carries through the scan.
+                p_arg = jnp.asarray([j.p for j in act], dtype)
+                p = self.effective_p()  # event-log annotation (initial)
+                rule = est.estimating_rule(
+                    pol,
+                    float(self.n_chips),
+                    dtype=dtype,
+                    n_chips=self.n_chips if self.quantize else None,
+                    min_chips=self.min_chips,
+                    snap_slices=self.snap_slices,
+                    **est_kw,
+                )
+            elif self.quantize:
+                p_arg = p = self.effective_p()
                 rule = _engine.quantized_rule(
                     pol, self.n_chips, min_chips=self.min_chips, dtype=dtype,
                     snap_slices=self.snap_slices,
                 )
             else:
+                p_arg = p = self.effective_p()
                 rule = _engine.continuous_rule(
                     pol, float(self.n_chips), dtype=dtype
                 )

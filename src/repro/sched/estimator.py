@@ -2,13 +2,22 @@
 
 The paper assumes p is known a priori; in production we fit it.  With
 ``s(k) = c * k^p``, observed throughput T(k) at allocation k satisfies
-``log T = log c + p log k`` — ordinary least squares over the (k, T) history,
-optionally exponentially discounted so p tracks regime changes (e.g. a job
-entering a communication-bound phase has its *effective* p drop).
+``log T = log c + p log k`` — weighted least squares over the (k, T)
+history, ridge-blended toward a prior and optionally exponentially
+discounted so p tracks regime changes (e.g. a job entering a
+communication-bound phase has its *effective* p drop).
 
 ``blended_p`` work-weights the per-job estimates into the single p heSRPT
-uses (the paper's single-speedup assumption; documented approximation for
-heterogeneous jobs, DESIGN.md §9).
+uses (the paper assumes one speedup exponent; the blend is the documented
+approximation for heterogeneous jobs — see the README architecture
+section).  ``pooled_p_hat`` is the per-class variant: jobs of one class
+share one true exponent, so the right fit is the WLS over their
+concatenated histories.
+
+This NumPy implementation is the per-event oracle; the jit-safe
+recursive-WLS port that runs *inside* the allocation engine's scan lives
+in ``repro/core/estimation.py`` (same ridge formula over sufficient
+statistics, regression-tested to agree to float precision).
 """
 
 from __future__ import annotations
@@ -16,6 +25,27 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 import numpy as np
+
+# Single source of truth for the clip bounds (p=0 and p=1 are both
+# degenerate for the Thm-7 brackets): the NumPy/JAX fp-agreement contract
+# breaks silently if the two implementations clip differently.
+from repro.core.estimation import P_CLIP
+
+
+def _ridge_p_hat(lk, lt, w, prior_p: float, prior_weight: float) -> float:
+    """Ridge-regularized WLS slope of ``lt`` on ``lk``: pulled toward
+    ``prior_p`` with strength ``prior_weight``, i.e. ``alpha * OLS +
+    (1 - alpha) * prior`` with ``alpha = var / (var + prior_weight)`` —
+    the blend by effective sample size.  Falls back to the prior when the
+    design is unidentifiable (all samples at one allocation)."""
+    wsum = w.sum()
+    mk, mt = (w * lk).sum() / wsum, (w * lt).sum() / wsum
+    var = (w * (lk - mk) ** 2).sum()
+    cov = (w * (lk - mk) * (lt - mt)).sum()
+    if var < 1e-12:
+        return prior_p  # all samples at one allocation: unidentifiable
+    slope = (cov + prior_weight * prior_p) / (var + prior_weight + 1e-12)
+    return float(np.clip(slope, *P_CLIP))
 
 
 @dataclass
@@ -36,23 +66,13 @@ class SpeedupEstimator:
         self.history.append((np.log(chips), np.log(throughput), 1.0))
 
     def p_hat(self) -> float:
-        """OLS slope with a ridge-style pull toward the prior."""
+        """Ridge-blended WLS slope (see :func:`_ridge_p_hat`)."""
         if len(self.history) < 2:
             return self.prior_p
         lk = np.array([h[0] for h in self.history])
         lt = np.array([h[1] for h in self.history])
         w = np.array([h[2] for h in self.history])
-        wsum = w.sum()
-        mk, mt = (w * lk).sum() / wsum, (w * lt).sum() / wsum
-        var = (w * (lk - mk) ** 2).sum()
-        cov = (w * (lk - mk) * (lt - mt)).sum()
-        if var < 1e-12:
-            return self.prior_p  # all samples at one allocation: unidentifiable
-        slope = (cov + self.prior_weight * 0.0) / (var + self.prior_weight * 0.0 + 1e-12)
-        # blend with prior by effective sample size
-        alpha = var / (var + self.prior_weight)
-        p = alpha * slope + (1 - alpha) * self.prior_p
-        return float(np.clip(p, 0.01, 0.999))
+        return _ridge_p_hat(lk, lt, w, self.prior_p, self.prior_weight)
 
     def rate_at(self, chips: float) -> float:
         """Predicted throughput c * k^p (c fit given p_hat)."""
@@ -73,3 +93,23 @@ def blended_p(estimators, remaining_work) -> float:
     if w.sum() <= 0:
         return float(ps.mean()) if len(ps) else 0.7
     return float((ps * w).sum() / w.sum())
+
+
+def pooled_p_hat(
+    estimators, prior_p: float, prior_weight: float = 1.0
+) -> float:
+    """One p-hat from the *pooled* histories of several estimators.
+
+    The per-class fit: every job of a class shares one true exponent, so
+    the WLS over the concatenated (discounted) histories — equivalently
+    the summed sufficient statistics, which is what the jit-safe twin
+    ``repro.core.estimation.p_hat_classes`` accumulates — beats averaging
+    per-job fits.  Falls back to ``prior_p`` below 2 pooled samples.
+    """
+    hist = [h for e in estimators for h in e.history]
+    if len(hist) < 2:
+        return prior_p
+    lk = np.array([h[0] for h in hist])
+    lt = np.array([h[1] for h in hist])
+    w = np.array([h[2] for h in hist])
+    return _ridge_p_hat(lk, lt, w, prior_p, prior_weight)

@@ -1,0 +1,419 @@
+"""Online p-hat estimation: the JAX recursive-WLS port vs the NumPy
+estimator, the stateful-rule engine API, p-drift scenarios, and the
+``ClusterScheduler(use_estimator=True)`` engine delegation.
+
+The exactness contracts:
+
+- the fixed ridge blend in ``sched/estimator.py`` and the
+  sufficient-statistics fit in ``core/estimation.py`` are the same
+  regression — same histories must give the same p-hat to float
+  precision (the ``prior_weight * 0.0`` dead-ridge regression);
+- a plain allocation rule and its :func:`~repro.core.engine.as_stateful`
+  wrapper are the SAME scan — trajectories must agree bit-for-bit;
+- ``use_estimator=True`` cluster runs delegate to the engine and must
+  reproduce the per-event Python oracle (identical observation schedules)
+  to <= 1e-8 on flows.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, estimation, make_policy, make_scenario
+from repro.core.arrivals import simulate_online
+from repro.sched import ClusterScheduler, Job
+from repro.sched.estimator import SpeedupEstimator, blended_p, pooled_p_hat
+
+
+def _observe_seq(rng, n_obs, p, c=2.0, noise=0.0):
+    """A (chips, throughput) sample path from the s(k) = c k^p family."""
+    ks = rng.uniform(1.0, 64.0, n_obs)
+    ts = c * ks ** p * np.exp(noise * rng.standard_normal(n_obs))
+    return ks, ts
+
+
+# ------------------------------------------------- NumPy <-> JAX agreement
+@pytest.mark.parametrize("discount", [1.0, 0.9, 0.5])
+def test_jax_rls_matches_numpy_estimator(discount):
+    """Regression test for the dead-ridge fix: recursive sufficient
+    statistics and the NumPy history fit give the same ridge-blended
+    p-hat, including exponential forgetting and the prior fallbacks."""
+    rng = np.random.default_rng(0)
+    M = 7
+    prior_p = rng.uniform(0.2, 0.8, M)
+    prior_w = rng.uniform(0.1, 3.0, M)
+    ests = [
+        SpeedupEstimator(prior_p=float(prior_p[j]), prior_weight=float(prior_w[j]),
+                         discount=discount)
+        for j in range(M)
+    ]
+    state = estimation.init_est_state(M, jnp.float64)
+    n_rounds = 12
+    for _ in range(n_rounds):
+        chips = rng.uniform(0.0, 32.0, M)
+        chips[rng.random(M) < 0.25] = 0.0  # queued jobs learn nothing
+        rate = 1.7 * chips ** 0.6
+        for j in range(M):
+            ests[j].observe(chips[j], rate[j])
+        obs = engine.Observation(
+            alloc=jnp.asarray(chips), rate=jnp.asarray(rate),
+            dt=jnp.asarray(0.5), active=jnp.ones(M, bool),
+        )
+        state = estimation.observe_throughput(state, obs, discount=discount)
+    got = np.asarray(estimation.p_hat_jobs(
+        state, jnp.asarray(prior_p), prior_weight=jnp.asarray(prior_w)))
+    want = np.array([e.p_hat() for e in ests])
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)
+    # blended read-out == sched.estimator.blended_p on the same work
+    x_rem = jnp.asarray(rng.uniform(0.5, 5.0, M))
+    got_b = float(estimation.blended_p_hat(
+        state, x_rem, jnp.asarray(prior_p), prior_weight=jnp.asarray(prior_w)))
+    want_b = blended_p(ests, np.asarray(x_rem))
+    np.testing.assert_allclose(got_b, want_b, rtol=1e-9)
+
+
+def test_recursive_wls_equals_batch_ols():
+    """Seeded-fuzz twin of the hypothesis property: folding observations
+    one at a time through the sufficient statistics equals the one-shot
+    weighted OLS slope on the full (discount-weighted) history."""
+    rng = np.random.default_rng(1)
+    for trial in range(25):
+        n_obs = int(rng.integers(2, 40))
+        discount = float(rng.uniform(0.5, 1.0))
+        ks, ts = _observe_seq(rng, n_obs, rng.uniform(0.1, 0.9), noise=0.3)
+        state = estimation.init_est_state(1, jnp.float64)
+        for k, t in zip(ks, ts, strict=True):
+            obs = engine.Observation(
+                alloc=jnp.asarray([k]), rate=jnp.asarray([t]),
+                dt=jnp.asarray(1.0), active=jnp.ones(1, bool),
+            )
+            state = estimation.observe_throughput(state, obs, discount=discount)
+        got = float(estimation.p_hat_jobs(state, 0.5, prior_weight=1e-12)[0])
+        # batch WLS with the same exponential weights
+        w = discount ** np.arange(n_obs - 1, -1, -1, dtype=np.float64)
+        lk, lt = np.log(ks), np.log(ts)
+        mk = (w * lk).sum() / w.sum()
+        mt = (w * lt).sum() / w.sum()
+        slope = (w * (lk - mk) * (lt - mt)).sum() / (w * (lk - mk) ** 2).sum()
+        np.testing.assert_allclose(got, np.clip(slope, 0.01, 0.999),
+                                   rtol=1e-8, atol=1e-10)
+
+
+def test_p_hat_prior_fallback_and_clip_bounds():
+    """<2 samples or an unidentifiable design -> the prior; otherwise the
+    fit is clipped into the open (0, 1) exponent range."""
+    state = estimation.init_est_state(1, jnp.float64)
+    assert float(estimation.p_hat_jobs(state, 0.42)[0]) == 0.42
+    # two samples at the SAME allocation: var == 0 -> prior
+    for _ in range(2):
+        obs = engine.Observation(
+            alloc=jnp.asarray([8.0]), rate=jnp.asarray([3.0]),
+            dt=jnp.asarray(1.0), active=jnp.ones(1, bool))
+        state = estimation.observe_throughput(state, obs)
+    assert float(estimation.p_hat_jobs(state, 0.42)[0]) == 0.42
+    # wildly super-linear data clips at the upper bound, never escapes (0,1)
+    state = estimation.init_est_state(1, jnp.float64)
+    for k in (2.0, 64.0):
+        obs = engine.Observation(
+            alloc=jnp.asarray([k]), rate=jnp.asarray([k ** 4]),
+            dt=jnp.asarray(1.0), active=jnp.ones(1, bool))
+        state = estimation.observe_throughput(state, obs, discount=1.0)
+    p = float(estimation.p_hat_jobs(state, 0.5, prior_weight=1e-9)[0])
+    assert p == estimation.P_CLIP[1]
+    # NumPy estimator agrees on both edge behaviours
+    e = SpeedupEstimator(prior_p=0.5, prior_weight=1e-9)
+    e.observe(2.0, 2.0 ** 4)
+    e.observe(64.0, 64.0 ** 4)
+    assert e.p_hat() == estimation.P_CLIP[1]
+
+
+def test_estimator_recovers_true_p_seeded():
+    """Seeded twin of the hypothesis property in test_properties.py."""
+    for p in (0.15, 0.5, 0.85):
+        est = SpeedupEstimator(prior_p=0.5, prior_weight=1e-6)
+        for k in (1, 2, 4, 8, 16, 32):
+            est.observe(k, 3.7 * k ** p)
+        assert abs(est.p_hat() - p) < 0.02
+
+
+def test_pooled_p_hat_beats_per_job_on_shared_exponent():
+    """Two jobs of one class, each with a 2-point history: pooling the
+    sufficient statistics fits the shared exponent from all 4 samples."""
+    p_true = 0.63
+    a = SpeedupEstimator(prior_p=0.3, prior_weight=1e-9)
+    b = SpeedupEstimator(prior_p=0.3, prior_weight=1e-9)
+    for k in (2.0, 8.0):
+        a.observe(k, 1.0 * k ** p_true)
+    for k in (16.0, 64.0):
+        b.observe(k, 1.0 * k ** p_true)
+    pooled = pooled_p_hat([a, b], 0.3, 1e-9)
+    np.testing.assert_allclose(pooled, p_true, rtol=1e-9)
+    # jit-safe twin on the same observations, pooled by class id
+    state = estimation.init_est_state(2, jnp.float64)
+    for ka, kb in ((2.0, 16.0), (8.0, 64.0)):
+        obs = engine.Observation(
+            alloc=jnp.asarray([ka, kb]),
+            rate=jnp.asarray([ka ** p_true, kb ** p_true]),
+            dt=jnp.asarray(1.0), active=jnp.ones(2, bool))
+        state = estimation.observe_throughput(state, obs)
+    p_k = estimation.p_hat_classes(
+        state, jnp.zeros(2, jnp.int32), 1, 0.3, prior_weight=1e-9)
+    np.testing.assert_allclose(float(p_k[0]), pooled, rtol=1e-9)
+
+
+# ------------------------------------------------------ stateful-rule engine
+def test_stateless_rule_and_as_stateful_are_bit_for_bit():
+    """The tentpole's backward-compatibility contract: wrapping a plain
+    rule in the trivial StatefulRule changes nothing, bit for bit."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.pareto(1.5, 24) + 1.0)
+    arr = jnp.asarray(np.cumsum(rng.exponential(0.5, 24)))
+    pol = make_policy("hesrpt", n_servers=64.0)
+    plain = engine.continuous_rule(pol, 64.0, dtype=x.dtype)
+    wrapped = engine.as_stateful(plain)
+    explicit = engine.StatefulRule(
+        init=lambda: (), observe=lambda st, obs: st,
+        allocate=lambda st, x_act, p: plain(x_act, p),
+    )
+    a = engine.run(x, arr, 0.5, plain, record=True)
+    b = engine.run(x, arr, 0.5, wrapped, record=True)
+    c = engine.run(x, arr, 0.5, explicit, record=True)
+    for other in (b, c):
+        np.testing.assert_array_equal(np.asarray(a.completion_times),
+                                      np.asarray(other.completion_times))
+        np.testing.assert_array_equal(np.asarray(a.trace.alloc),
+                                      np.asarray(other.trace.alloc))
+        np.testing.assert_array_equal(np.asarray(a.trace.times),
+                                      np.asarray(other.trace.times))
+    # idempotent: as_stateful of a StatefulRule is the same object
+    assert engine.as_stateful(wrapped) is wrapped
+
+
+def test_estimating_rule_converges_and_conserves():
+    """Batch run with a wrong prior: the blended p-hat the rule carries
+    converges toward the true exponent, allocations stay a distribution,
+    and the estimator run can't beat the known-p run."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.pareto(1.5, 30) + 1.0)
+    arr = jnp.zeros(30)
+    p_true = 0.7
+    pol = make_policy("hesrpt", n_servers=128.0)
+    rule = estimation.estimating_rule(
+        pol, 128.0, prior_p=0.3, prior_weight=1.0, discount=1.0,
+        dtype=x.dtype, n_jobs=30)
+    res = engine.run(x, arr, p_true, rule, pre_arrived=True, horizon=30,
+                     record=True)
+    assert np.all(np.isfinite(np.asarray(res.completion_times)))
+    theta = np.asarray(res.trace.alloc)
+    live = np.asarray(res.trace.sizes) > 0
+    sums = theta.sum(axis=1)
+    assert np.all(sums[live.any(axis=1)] <= 1 + 1e-9)
+    assert np.all(theta >= -1e-12)
+    # oracle run on the same jobs is at least as good
+    oracle = simulate_online(x, arr, p_true, 128.0, pol)
+    est_total = float(np.sum(np.asarray(res.completion_times)))
+    assert float(oracle.total_flowtime) <= est_total * (1 + 1e-9)
+    # and the final per-job estimates are near the truth for jobs that
+    # observed at several distinct allocations (here: all of them)
+    # -> rerun the observation fold to read the state out
+    state = rule.init()
+    for e in range(theta.shape[0]):
+        obs = engine.Observation(
+            alloc=jnp.asarray(theta[e]) * 128.0,
+            rate=jnp.asarray(theta[e] * 128.0) ** p_true,
+            dt=jnp.asarray(1.0), active=jnp.asarray(live[e]))
+        state = estimation.observe_throughput(state, obs)
+    p_hats = np.asarray(estimation.p_hat_jobs(state, 0.3, prior_weight=1e-6))
+    seen = np.asarray(state.n) >= 3
+    assert np.all(np.abs(p_hats[seen] - p_true) < 0.05)
+
+
+def test_drift_single_job_exact():
+    """One job, theta == 1: completion under a p0 -> p1 drift has a
+    two-piece closed form; the engine must hit it exactly."""
+    pol = make_policy("hesrpt", n_servers=16.0)
+    rule = engine.continuous_rule(pol, 16.0, dtype=jnp.float64)
+    x = jnp.asarray([10.0])
+    t_d, p0, p1 = 0.75, 0.8, 0.2
+    drift = engine.PDrift(times=jnp.asarray([t_d]),
+                          values=jnp.asarray([p0, p1]))
+    res = engine.run(x, jnp.zeros(1), p0, rule, pre_arrived=True,
+                     p_drift=drift)
+    expect = t_d + (10.0 - t_d * 16 ** p0) / 16 ** p1
+    np.testing.assert_allclose(float(res.completion_times[0]), expect,
+                               rtol=1e-12)
+    # drift after the job would finish: no effect at all
+    late = engine.PDrift(times=jnp.asarray([1e6]),
+                         values=jnp.asarray([p0, p1]))
+    res_late = engine.run(x, jnp.zeros(1), p0, rule, pre_arrived=True,
+                          p_drift=late)
+    np.testing.assert_allclose(float(res_late.completion_times[0]),
+                               10.0 / 16 ** p0, rtol=1e-12)
+
+
+def test_drift_scenario_estimator_between_oracle_and_stale():
+    """On a p-drift stream the three arms order as they must: oracle <=
+    estimator (has to learn) and estimator <= stale (never learns)."""
+    from repro.core import simulate_scenario, simulate_scenario_estimated
+
+    key = jax.random.PRNGKey(2)
+    sampler = make_scenario("drift_poisson", p0=0.8, p1=0.3, drift_frac=0.4)
+    scn = sampler(key, 80, 4.0)
+    assert scn.p_drift is not None
+    pol = make_policy("hesrpt", n_servers=128.0)
+    oracle = simulate_scenario(scn, 0.8, 128.0, pol)
+    stale = simulate_scenario(scn._replace(p_hat=jnp.asarray(0.8)), 0.8,
+                              128.0, pol)
+    est = simulate_scenario_estimated(scn, 0.8, 128.0, pol, prior_p=0.8,
+                                      discount=0.9)
+    f_o = float(oracle.mean_flowtime)
+    f_s = float(stale.mean_flowtime)
+    f_e = float(est.mean_flowtime)
+    assert f_o <= f_e * (1 + 1e-9)
+    assert f_e < f_s  # tracking the drift must pay on this stream
+
+
+def test_estimation_sweep_jit_vmap_single_call():
+    """The acceptance-criterion shape: estimator-in-the-loop seeds x loads
+    through one jitted vmap (scaled down for test runtime)."""
+    from benchmarks.estimation import sweep
+
+    out = sweep(("oracle", "stale", "estimator"), (0.5, 2.0),
+                n_jobs=30, n_seeds=4, n_servers=64.0)
+    for arm in ("oracle", "stale", "estimator"):
+        assert set(out[arm]) == {0.5, 2.0}
+        assert all(np.isfinite(v) for v in out[arm].values())
+
+
+# --------------------------------------------- cluster delegation oracle
+def _mk_sched(sizes, ps, priors, **kw):
+    s = ClusterScheduler(48, policy="hesrpt", use_estimator=True, **kw)
+    for i, (sz, p, pr) in enumerate(zip(sizes, ps, priors, strict=True)):
+        s.add_job(Job(f"j{i}", size=float(sz), p=float(p), prior_p=float(pr)))
+    return s
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_cluster_estimator_delegates_and_matches_oracle(quantize):
+    """use_estimator=True now runs on the engine; the per-event Python
+    loop is the oracle it must reproduce to <= 1e-8 on flows (identical
+    observation schedules), heterogeneous true p included."""
+    rng = np.random.default_rng(11)
+    for _ in range(2):
+        sizes = rng.pareto(1.5, 10) + 1.0
+        ps = rng.uniform(0.3, 0.8, 10)
+        a = _mk_sched(sizes, ps, np.full(10, 0.5), quantize=quantize,
+                      est_discount=0.9)
+        b = _mk_sched(sizes, ps, np.full(10, 0.5), quantize=quantize,
+                      est_discount=0.9)
+        assert a._engine_eligible()
+        ra = a.run_fluid_to_completion(use_engine=True)
+        rb = b.run_fluid_to_completion(use_engine=False)
+        ta = np.array([ra["completion_times"][f"j{i}"] for i in range(10)])
+        tb = np.array([rb["completion_times"][f"j{i}"] for i in range(10)])
+        np.testing.assert_allclose(ta, tb, rtol=1e-8)
+        if quantize:  # integer chips agree event-for-event in practice
+            ea = [e["chips"] for e in a.events if e["event"] == "allocate"]
+            eb = [e["chips"] for e in b.events if e["event"] == "allocate"]
+            assert ea == eb
+
+
+def test_cluster_class_aware_estimator_matches_oracle():
+    """Class-aware + estimator: the engine's per-class pooled p-hat
+    (segment-summed sufficient statistics) vs the oracle's pooled
+    histories."""
+    rng = np.random.default_rng(12)
+    pk = {0: 0.35, 1: 0.6, 2: 0.8}
+    sizes = rng.pareto(1.5, 12) + 1.0
+    cls = rng.integers(0, 3, 12)
+
+    def mk():
+        s = ClusterScheduler(48, policy="hesrpt_pc", use_estimator=True,
+                             class_aware=True)
+        for i, sz in enumerate(sizes):
+            s.add_job(Job(f"j{i}", size=float(sz), p=pk[int(cls[i])],
+                          class_id=int(cls[i]), prior_p=0.5))
+        return s
+
+    a, b = mk(), mk()
+    assert a._engine_eligible()
+    ra = a.run_fluid_to_completion(use_engine=True)
+    rb = b.run_fluid_to_completion(use_engine=False)
+    ta = np.array([ra["completion_times"][f"j{i}"] for i in range(12)])
+    tb = np.array([rb["completion_times"][f"j{i}"] for i in range(12)])
+    np.testing.assert_allclose(ta, tb, rtol=1e-8)
+
+
+def test_cluster_estimator_seeds_engine_from_history():
+    """Jobs that already observed throughput (report_progress) delegate
+    with their history folded into the engine's sufficient statistics —
+    the two paths must stay in agreement mid-flight too."""
+
+    def mk():
+        s = _mk_sched([4.0, 3.0, 2.0], [0.6, 0.6, 0.6], [0.4, 0.4, 0.4])
+        s.allocations()
+        for jid in ("j0", "j1"):
+            s.report_progress(jid, 0.5, wall_dt=0.25)
+        return s
+
+    a, b = mk(), mk()
+    assert a.jobs["j0"].estimator.history  # the seed is non-trivial
+    ra = a.run_fluid_to_completion(use_engine=True)
+    rb = b.run_fluid_to_completion(use_engine=False)
+    ta = np.array(sorted(ra["completion_times"].values()))
+    tb = np.array(sorted(rb["completion_times"].values()))
+    np.testing.assert_allclose(ta, tb, rtol=1e-8)
+
+
+def test_cluster_class_estimator_reuse_keeps_departed_observations():
+    """Regression: a second run on the same scheduler must pool the
+    FIRST run's (departed) observations into the class p-hat on the
+    engine path too, exactly as the per-event oracle does."""
+    pk = {0: 0.35, 1: 0.75}
+
+    def mk():
+        s = ClusterScheduler(32, policy="hesrpt_pc", use_estimator=True,
+                             class_aware=True)
+        for i, sz in enumerate([5.0, 3.0, 2.0, 4.0]):
+            s.add_job(Job(f"a{i}", size=sz, p=pk[i % 2], class_id=i % 2,
+                          prior_p=0.5))
+        s.run_fluid_to_completion(use_engine=False)  # builds real histories
+        for i, sz in enumerate([4.0, 2.5, 1.5, 3.5]):
+            s.add_job(Job(f"b{i}", size=sz, p=pk[i % 2], class_id=i % 2,
+                          prior_p=0.5))
+        return s
+
+    a, b = mk(), mk()
+    ra = a.run_fluid_to_completion(use_engine=True)
+    rb = b.run_fluid_to_completion(use_engine=False)
+    ta = np.array([ra["completion_times"][f"b{i}"] for i in range(4)])
+    tb = np.array([rb["completion_times"][f"b{i}"] for i in range(4)])
+    np.testing.assert_allclose(ta, tb, rtol=1e-8)
+
+
+def test_simulate_multiclass_with_estimated_class_exponents():
+    """core/multiclass.py accepts online-estimated per-class p-hat_k:
+    the estimating rule runs inside the same engine scan and cannot beat
+    the truth-fed class-aware run."""
+    from repro.core import ClassSpec, simulate_multiclass
+
+    classes = (ClassSpec(p=0.35, mix=1.0), ClassSpec(p=0.75, mix=1.0))
+    key = jax.random.PRNGKey(5)
+    scn = make_scenario("multiclass_poisson", classes=classes)(key, 40, 3.0)
+    truth = simulate_multiclass(scn, classes=classes, policy="hesrpt_pc",
+                                n_servers=64.0)
+    est = simulate_multiclass(
+        scn, classes=classes, policy="hesrpt_pc", n_servers=64.0,
+        estimator_kw=dict(prior_p=jnp.asarray([0.5, 0.5]), discount=0.95),
+    )
+    assert np.all(np.isfinite(np.asarray(est.completion_times)))
+    assert float(truth.mean_flowtime) <= float(est.mean_flowtime) * 1.05
+
+
+def test_knee_still_falls_back_to_python_loop():
+    """The one remaining Python-only feature: per-epoch KNEE alpha."""
+    s = ClusterScheduler(16, policy="knee", use_estimator=True)
+    s.add_job(Job("a", size=4.0, p=0.5))
+    assert not s._engine_eligible()
+    assert s.run_fluid_to_completion()["makespan"] > 0

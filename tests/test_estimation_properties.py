@@ -1,0 +1,144 @@
+"""Property-based tests (hypothesis) for the estimation subsystem and the
+stateful-rule engine contract — the fuzzed twins of the seeded tests in
+tests/test_estimation.py."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')"
+)
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+from repro.core import engine, estimation, make_policy  # noqa: E402
+from repro.sched.estimator import SpeedupEstimator  # noqa: E402
+
+
+def _design_var(samples, discount):
+    """The history's weighted design variance — both implementations gate
+    identifiability on it at 1e-12, so properties asserting exact
+    agreement must stay clear of that boundary (their fp paths differ by
+    ~1 ulp and could land on opposite sides)."""
+    n = len(samples)
+    w = np.array([discount ** (n - 1 - i) for i in range(n)])
+    lk = np.log([k for k, _ in samples])
+    mk = (w * lk).sum() / w.sum()
+    return float((w * (lk - mk) ** 2).sum())
+
+obs_strategy = st.lists(
+    st.tuples(
+        st.floats(min_value=0.5, max_value=256.0),  # chips
+        st.floats(min_value=0.01, max_value=1e3),  # throughput
+    ),
+    min_size=2,
+    max_size=25,
+)
+prior_strategy = st.floats(min_value=0.05, max_value=0.95)
+discount_strategy = st.floats(min_value=0.3, max_value=1.0)
+
+
+def _fold(samples, discount):
+    """Recursive JAX state from a (chips, throughput) sample path."""
+    state = estimation.init_est_state(1, jnp.float64)
+    for k, t in samples:
+        obs = engine.Observation(
+            alloc=jnp.asarray([k]), rate=jnp.asarray([t]),
+            dt=jnp.asarray(1.0), active=jnp.ones(1, bool),
+        )
+        state = estimation.observe_throughput(state, obs, discount=discount)
+    return state
+
+
+@settings(max_examples=30, deadline=None)
+@given(obs_strategy, prior_strategy, discount_strategy,
+       st.floats(min_value=1e-6, max_value=10.0))
+def test_recursive_wls_equals_batch_ols(samples, prior, discount, prior_w):
+    """Folding observations through the sufficient statistics == the
+    one-shot ridge-blended WLS on the full discounted history (what the
+    NumPy estimator computes)."""
+    assume(not 1e-13 < _design_var(samples, discount) < 1e-11)
+    est = SpeedupEstimator(prior_p=prior, prior_weight=prior_w,
+                           discount=discount)
+    for k, t in samples:
+        est.observe(k, t)
+    state = _fold(samples, discount)
+    got = float(estimation.p_hat_jobs(state, prior, prior_weight=prior_w)[0])
+    np.testing.assert_allclose(got, est.p_hat(), rtol=1e-8, atol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(obs_strategy, prior_strategy, discount_strategy)
+def test_p_hat_respects_clip_and_prior_bounds(samples, prior, discount):
+    """p-hat always lands in [min(clip_lo, prior), max(clip_hi, prior)]
+    and exactly on the prior for degenerate histories."""
+    state = _fold(samples, discount)
+    p = float(estimation.p_hat_jobs(state, prior)[0])
+    lo, hi = estimation.P_CLIP
+    assert min(lo, prior) - 1e-12 <= p <= max(hi, prior) + 1e-12
+    empty = estimation.init_est_state(1, jnp.float64)
+    assert float(estimation.p_hat_jobs(empty, prior)[0]) == prior
+    # one repeated allocation: unidentifiable -> prior, any history length
+    same = _fold([(8.0, t) for _, t in samples], discount)
+    assert float(estimation.p_hat_jobs(same, prior)[0]) == prior
+
+
+@settings(max_examples=30, deadline=None)
+@given(obs_strategy, discount_strategy)
+def test_pooled_stats_equal_concatenated_history(samples, discount):
+    """Per-class pooling of per-job sufficient statistics == the WLS on
+    the concatenated histories (the NumPy ``pooled_p_hat``)."""
+    from repro.sched.estimator import pooled_p_hat
+
+    half = len(samples) // 2
+    a = SpeedupEstimator(prior_p=0.5, discount=discount)
+    b = SpeedupEstimator(prior_p=0.5, discount=discount)
+    for k, t in samples[:half]:
+        a.observe(k, t)
+    for k, t in samples[half:]:
+        b.observe(k, t)
+    hist = a.history + b.history
+    w = np.array([h[2] for h in hist])
+    lk = np.array([h[0] for h in hist])
+    mk = (w * lk).sum() / w.sum()
+    pooled_var = float((w * (lk - mk) ** 2).sum())
+    assume(not 1e-13 < pooled_var < 1e-11)
+    state = estimation.init_est_state(2, jnp.float64)
+    for i in range(max(half, len(samples) - half)):
+        row = [
+            samples[i] if i < half else (0.0, 0.0),
+            samples[half + i] if half + i < len(samples) else (0.0, 0.0),
+        ]
+        obs = engine.Observation(
+            alloc=jnp.asarray([r[0] for r in row]),
+            rate=jnp.asarray([r[1] for r in row]),
+            dt=jnp.asarray(1.0), active=jnp.ones(2, bool),
+        )
+        state = estimation.observe_throughput(state, obs, discount=discount)
+    got = float(estimation.p_hat_classes(
+        state, jnp.zeros(2, jnp.int32), 1, 0.5)[0])
+    want = pooled_p_hat([a, b], 0.5, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-9)
+
+
+sizes12 = st.lists(
+    st.floats(min_value=0.05, max_value=50.0), min_size=12, max_size=12
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(sizes12, st.floats(min_value=0.1, max_value=0.9))
+def test_stateless_rule_wrapping_is_bit_for_bit(xs, p):
+    """The tentpole contract, fuzzed: a plain rule and its as_stateful
+    wrapper produce identical trajectories, bit for bit (fixed shape so
+    every example hits the same compiled scan)."""
+    x = jnp.asarray(xs)
+    arr = jnp.linspace(0.0, 1.0, 12)
+    pol = make_policy("hesrpt", n_servers=64.0)
+    plain = engine.continuous_rule(pol, 64.0, dtype=x.dtype)
+    a = engine.run(x, arr, p, plain)
+    b = engine.run(x, arr, p, engine.as_stateful(plain))
+    np.testing.assert_array_equal(np.asarray(a.completion_times),
+                                  np.asarray(b.completion_times))
+    np.testing.assert_array_equal(np.asarray(a.x_final),
+                                  np.asarray(b.x_final))

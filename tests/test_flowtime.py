@@ -8,12 +8,17 @@ import pytest
 from repro.core import (
     hesrpt,
     hesrpt_completion_times,
+    hesrpt_sd_mean_slowdown,
     hesrpt_total_flowtime,
     helrpt,
     make_policy,
     omega_star,
+    omega_weighted,
     optimal_makespan,
     simulate,
+    speedup,
+    weighted_hesrpt,
+    weighted_total_flowtime,
 )
 
 
@@ -91,6 +96,60 @@ def test_hesrpt_is_optimal_vs_competitors(name, p):
     assert float(f_opt) <= float(f_other) * (1 + 1e-9), (
         f"heSRPT={float(f_opt)} vs {name}={float(f_other)} at p={p}"
     )
+
+
+# ------------------------------------- Berg-2020 slowdown (weighted Thm 8)
+def test_weighted_flowtime_reduces_to_theorem8_with_uniform_weights():
+    """W_k = k collapses the weighted closed form onto Theorem 8 exactly
+    (the coefficient identity (k^c - (k-1)^c)^(1-p) == k s(1+w_k) -
+    (k-1) s(w_k))."""
+    rng = np.random.default_rng(7)
+    x = np.sort(rng.pareto(1.5, 40) + 1.0)[::-1].copy()
+    for p in (0.05, 0.3, 0.5, 0.9, 0.99):
+        a = float(weighted_total_flowtime(jnp.asarray(x), jnp.ones(40), p, 512.0))
+        b = float(hesrpt_total_flowtime(jnp.asarray(x), p, 512.0))
+        np.testing.assert_allclose(a, b, rtol=1e-12)
+
+
+def test_omega_weighted_reduces_to_omega_star():
+    om_w = omega_weighted(jnp.ones(50), 0.37)
+    om = omega_star(50, 0.37)
+    np.testing.assert_allclose(np.asarray(om_w), np.asarray(om), rtol=1e-12)
+
+
+@pytest.mark.parametrize("p", [0.05, 0.3, 0.5, 0.9, 0.99])
+def test_weighted_closed_form_matches_weighted_sim(p):
+    """The weighted bracket policy's achieved sum w_k T_k equals the
+    weighted Thm-8 analogue for size-monotone weights (w = 1/x here, the
+    Berg-2020 slowdown weights)."""
+    rng = np.random.default_rng(8)
+    x = np.sort(rng.pareto(1.5, 30) + 1.0)[::-1].copy()
+    xj = jnp.asarray(x)
+    w = 1.0 / xj
+    closed = float(weighted_total_flowtime(xj, w, p, 1e4))
+    res = simulate(xj, p, 1e4, lambda xs, ps: weighted_hesrpt(xs, ps, w))
+    sim = float(jnp.sum(w * res.completion_times))
+    np.testing.assert_allclose(sim, closed, rtol=1e-9)
+
+
+@pytest.mark.parametrize("p", [0.3, 0.5, 0.9])
+def test_hesrpt_sd_mean_slowdown_closed_form(p):
+    """hesrpt_sd's batch mean slowdown == the closed-form oracle, and it
+    beats unweighted heSRPT on the slowdown objective (that's what the
+    1/x weighting buys)."""
+    rng = np.random.default_rng(9)
+    x = np.sort(rng.pareto(1.5, 25) + 1.0)[::-1].copy()
+    xj = jnp.asarray(x)
+    n = 1e4
+    closed = float(hesrpt_sd_mean_slowdown(xj, p, n))
+    w = 1.0 / xj
+    res = simulate(xj, p, n, lambda xs, ps: weighted_hesrpt(xs, ps, w))
+    sn = float(speedup(jnp.asarray(n), p))
+    sim = float(jnp.mean(res.completion_times * sn / xj))
+    np.testing.assert_allclose(sim, closed, rtol=1e-9)
+    res_he = simulate(xj, p, n, hesrpt)
+    sd_he = float(jnp.mean(res_he.completion_times * sn / xj))
+    assert closed <= sd_he * (1 + 1e-9)
 
 
 def test_simulation_is_jittable_and_vmappable():
