@@ -28,70 +28,42 @@ Sections:
 
 from __future__ import annotations
 
-import functools
 import time
 
 import numpy as np
 
+# Keep in sync with repro.core.sweeps.ARMS (duplicated so importing this
+# benchmark module stays jax-free; Sweep.create validates arm names, so a
+# drifted copy fails loudly rather than silently).
 ARMS = ("oracle", "stale", "estimator")
 RATES = (0.5, 2.0, 8.0)
 DRIFT_SCENARIOS = ("drift_poisson", "drift_bursty")
-
-
-@functools.lru_cache(maxsize=64)
-def _arm_fn(arm, policy, n_jobs, p0, p1, drift_frac, n_servers, scenario,
-            discount, prior_weight):
-    """Persistent jitted (seeds x rates) sweep for one arm (same caching
-    rationale as ``core.arrivals._sweep_fn``)."""
-    import jax
-    import jax.numpy as jnp
-
-    from repro.core import (
-        make_policy,
-        make_scenario,
-        simulate_scenario,
-        simulate_scenario_estimated,
-    )
-
-    sampler = make_scenario(scenario, p0=p0, p1=p1, drift_frac=drift_frac)
-    pol = make_policy(policy, n_servers=n_servers)
-
-    def one(key, rate):
-        scn = sampler(key, n_jobs, rate)
-        if arm == "oracle":
-            # simulate_scenario shows the rule the CURRENT true regime.
-            res = simulate_scenario(scn, p0, n_servers, pol)
-        elif arm == "stale":
-            # a pinned p_hat: the scheduler never notices the drift.
-            res = simulate_scenario(
-                scn._replace(p_hat=jnp.asarray(p0)), p0, n_servers, pol
-            )
-        else:  # estimator: allocate with the online blended p-hat
-            res = simulate_scenario_estimated(
-                scn, p0, n_servers, pol, prior_p=p0,
-                prior_weight=prior_weight, discount=discount,
-            )
-        return res.mean_flowtime
-
-    return jax.jit(jax.vmap(jax.vmap(one, in_axes=(0, None)),
-                            in_axes=(None, 0)))
 
 
 def sweep(arms=ARMS, rates=RATES, *, policy="hesrpt", n_jobs=500, n_seeds=20,
           p0=0.8, p1=0.3, drift_frac=0.5, n_servers=256.0, seed=0,
           scenario="drift_poisson", discount=0.9, prior_weight=1.0) -> dict:
     """Seeds x loads for each arm, paired sample paths (shared keys).
-    Returns ``{arm: {rate: mean-over-seeds mean flow time}}``."""
-    import jax
+    Returns ``{arm: {rate: mean-over-seeds mean flow time}}``.
+
+    Each arm is a thin :class:`repro.core.sweeps.Sweep` spec (the ``arm``
+    field selects oracle / stale / estimator semantics inside the engine),
+    golden-pinned bit-for-bit against the historical per-arm jit+vmap.
+    """
     import jax.numpy as jnp
 
-    keys = jax.random.split(jax.random.PRNGKey(seed), n_seeds)
-    rates_arr = jnp.asarray(rates, dtype=jnp.result_type(float))
+    from repro.core.sweeps import Sweep, run_sweep
+
     out = {}
     for arm in arms:
-        f = _arm_fn(arm, policy, n_jobs, p0, p1, drift_frac, float(n_servers),
-                    scenario, discount, prior_weight)
-        per_seed = f(keys, rates_arr)  # [n_rates, n_seeds]
+        spec = Sweep.create(
+            (policy,), rates, scenario=scenario,
+            scenario_kw={"p0": p0, "p1": p1, "drift_frac": drift_frac},
+            n_jobs=n_jobs, n_seeds=n_seeds, seed=seed, p=p0,
+            n_servers=float(n_servers), arm=arm,
+            arm_kw={"discount": discount, "prior_weight": prior_weight},
+        )
+        per_seed = run_sweep(spec).stats[policy]["mean_flowtime"]
         out[arm] = {
             float(r): float(jnp.mean(per_seed[i]))
             for i, r in enumerate(rates)

@@ -200,7 +200,10 @@ def cross_check(
 # ----------------------------------------------------------------- the sweeps
 def sweep(policies=POLICIES, rates=RATES, *, classes, n_jobs=1000, n_seeds=10,
           n_servers=256.0, seed=0, **kw):
-    """Multi-class heavy-traffic sweep: one jit+vmap call per policy."""
+    """Multi-class heavy-traffic sweep: delegates to ``multiclass_sweep``,
+    itself a thin spec over ``core/sweeps.py`` (one compiled device call
+    per policy); ``**kw`` forwards the regime knobs (scenario,
+    n_chips/min_chips, snap_slices, chunking/sharding)."""
     from repro.core import multiclass_sweep
 
     return multiclass_sweep(

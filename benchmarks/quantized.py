@@ -107,12 +107,15 @@ def cross_check(policies=("hesrpt", "equi", "srpt"), *, n_jobs=12, rate=1.0,
 # --------------------------------------------------------------- the sweeps
 def sweep(policies=POLICIES, rates=RATES, *, n_jobs=1000, n_seeds=20,
           p=0.5, n_chips=256, min_chips=1, seed=0):
-    """Quantized heavy-traffic sweep: one jit+vmap call per policy."""
-    from repro.core import load_sweep
+    """Quantized heavy-traffic sweep: a thin spec over ``core/sweeps.py``
+    (one compiled device call per policy), formatted as the historical
+    ``{rate: {policy: mean}}`` table."""
+    from repro.core.sweeps import Sweep, run_sweep
 
-    return load_sweep(policies, rates, n_jobs=n_jobs, n_seeds=n_seeds, p=p,
-                      n_servers=float(n_chips), seed=seed, n_chips=n_chips,
-                      min_chips=min_chips)
+    spec = Sweep.create(policies, rates, n_jobs=n_jobs, n_seeds=n_seeds, p=p,
+                        n_servers=float(n_chips), seed=seed, n_chips=n_chips,
+                        min_chips=min_chips)
+    return run_sweep(spec).cell_means()
 
 
 def quantization_gap(rates=RATES, *, n_jobs=1000, n_seeds=20, p=0.5,

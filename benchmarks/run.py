@@ -103,7 +103,14 @@ def main() -> None:
         text, _ = kernels_bench.main()
         print(text)
 
-    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+    # Every run_sweep call above logged a structured record (spec, per-cell
+    # stats, wall/compile time, backend); flush them so the perf trajectory
+    # accumulates — CI uploads this file as a workflow artifact.
+    from repro.core import sweeps
+
+    path = sweeps.write_bench_json()
+    print(f"\nwrote {len(sweeps.RUN_LOG)} sweep records to {path}")
+    print(f"all benchmarks done in {time.time() - t0:.1f}s")
 
 
 if __name__ == "__main__":

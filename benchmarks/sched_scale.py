@@ -4,6 +4,12 @@ Times the jitted theta computation + quantization at M up to 1e5 jobs —
 the decision-epoch cost a cluster controller pays.  heSRPT is O(M log M)
 (sort-dominated); this shows a 100k-job epoch decision is sub-second, i.e.
 the policy is deployable at full-cluster scale.
+
+Reports through :class:`repro.core.sweeps.SweepResult` (stats rows indexed
+by M instead of arrival rate, per-repeat theta timings so the record
+carries spread, not just a mean), so the M=1e5 epoch-decision timing lands
+in the ``BENCH_sweeps.json`` trajectory alongside the simulator sweeps.
+``python -m benchmarks.sched_scale --json`` prints the record.
 """
 
 from __future__ import annotations
@@ -14,43 +20,90 @@ import numpy as np
 
 
 def run(ms=(100, 1_000, 10_000, 100_000), p: float = 0.5, n_chips: int = 4096,
-        repeats: int = 5):
+        repeats: int = 5, log: bool = True):
+    """Time theta + quantize per M; returns a ``SweepResult``.
+
+    ``stats["hesrpt"]["theta_us"]`` is ``[len(ms), repeats]`` (one row per
+    M, one column per timed repeat); ``quantize_us`` and ``chips_sum`` are
+    ``[len(ms), 1]``.  ``log=True`` appends the compact record to the
+    sweep run log (the ``BENCH_sweeps.json`` trajectory).
+    """
     import jax
     import jax.numpy as jnp
 
     from repro.core import hesrpt
+    from repro.core.sweeps import RUN_LOG, SweepResult
     from repro.sched.quantize import quantize_allocation
 
-    rows = []
+    theta_us = np.zeros((len(ms), repeats))
+    quantize_us = np.zeros((len(ms), 1))
+    chips_sum = np.zeros((len(ms), 1))
     f = jax.jit(hesrpt)
-    for m in ms:
+    t_start = time.perf_counter()
+    compile_s = 0.0
+    for mi, m in enumerate(ms):
         rng = np.random.default_rng(0)
         x = jnp.asarray(np.sort(rng.pareto(1.5, m) + 1.0)[::-1].copy())
-        theta = f(x, p).block_until_ready()  # compile
         t0 = time.perf_counter()
-        for _ in range(repeats):
+        theta = f(x, p).block_until_ready()  # compile
+        compile_s += time.perf_counter() - t0
+        for r in range(repeats):
+            t0 = time.perf_counter()
             theta = f(x, p).block_until_ready()
-        t_theta = (time.perf_counter() - t0) / repeats
+            theta_us[mi, r] = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
         chips = quantize_allocation(np.asarray(theta), n_chips)
-        t_quant = time.perf_counter() - t0
-        rows.append({
-            "M": m,
-            "theta_us": t_theta * 1e6,
-            "quantize_us": t_quant * 1e6,
-            "chips_sum": int(chips.sum()),
-        })
-    return rows
+        quantize_us[mi, 0] = (time.perf_counter() - t0) * 1e6
+        chips_sum[mi, 0] = int(chips.sum())
+    result = SweepResult(
+        spec={
+            "kind": "sched_scale",
+            "ms": list(ms),
+            "p": p,
+            "n_chips": n_chips,
+            "repeats": repeats,
+            "policy": "hesrpt",
+        },
+        stats={
+            "hesrpt": {
+                "theta_us": theta_us,
+                "quantize_us": quantize_us,
+                "chips_sum": chips_sum,
+            }
+        },
+        wall_s=time.perf_counter() - t_start,
+        compile_s=compile_s,
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        chunk_seeds=None,
+        sharded=False,
+    )
+    if log:
+        RUN_LOG.append(result.record())
+    return result
 
 
 def main():
-    rows = run()
-    lines = [f"{'M':>8s} {'theta (us)':>12s} {'quantize (us)':>14s} {'sum(chips)':>10s}"]
-    for r in rows:
-        lines.append(f"{r['M']:8d} {r['theta_us']:12.1f} {r['quantize_us']:14.1f} "
-                     f"{r['chips_sum']:10d}")
-    return "\n".join(lines), rows
+    res = run()
+    ms = res.spec["ms"]
+    stats = res.stats["hesrpt"]
+    lines = [f"{'M':>8s} {'theta (us)':>12s} {'quantize (us)':>14s} "
+             f"{'sum(chips)':>10s}"]
+    for mi, m in enumerate(ms):
+        lines.append(
+            f"{m:8d} {stats['theta_us'][mi].mean():12.1f} "
+            f"{stats['quantize_us'][mi, 0]:14.1f} "
+            f"{int(stats['chips_sum'][mi, 0]):10d}"
+        )
+    return "\n".join(lines), res
 
 
 if __name__ == "__main__":
-    print(main()[0])
+    import json
+    import sys
+
+    text, res = main()
+    if "--json" in sys.argv:
+        print(json.dumps(res.record(), indent=1))
+    else:
+        print(text)

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.simulator import SimResult
 
@@ -34,6 +35,21 @@ def scale_free_constants(result: SimResult) -> jax.Array:
     # *larger* jobs is a prefix sum along the job axis.
     csum = jnp.cumsum(theta, axis=1) - theta
     return jnp.where(active & (theta > 0), csum / theta, jnp.nan)
+
+
+# ------------------------------------------------- per-cell aggregation
+def seed_axis_stats(values) -> dict[str, list]:
+    """Per-cell summary of one sweep stat over its seed axis.
+
+    ``values`` is a ``[n_rates, n_seeds]`` (or ``[n_rates, n_seeds, K]``)
+    array as produced by ``core/sweeps.py``; returns JSON-able
+    ``{"mean": [...], "std": [...]}`` lists with the seed axis reduced —
+    the per-cell unit the ``BENCH_sweeps.json`` trajectory records.
+    NumPy on purpose: this runs on host-side artifacts, not in traced code.
+    """
+    a = np.asarray(values)
+    return {"mean": np.mean(a, axis=1).tolist(),
+            "std": np.std(a, axis=1).tolist()}
 
 
 # ------------------------------------------------- per-class aggregation

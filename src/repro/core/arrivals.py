@@ -16,9 +16,11 @@ keeps the historical public API —
   rank-space policies (heSRPT/EQUI/SRPT),
 - :func:`simulate_online_quantized` — whole-chips allocation (the
   ``ClusterScheduler`` integer regime) in the same scan,
-- :func:`load_sweep` / :func:`load_sweep_raw` — jit+vmap sweeps over
-  seeds × loads for any registered scenario (Poisson, bursty MAP,
-  estimation noise, ...; see ``core/scenarios.py``),
+- :func:`load_sweep` / :func:`load_sweep_raw` — seeds × loads sweeps for
+  any registered scenario (Poisson, bursty MAP, estimation noise, ...; see
+  ``core/scenarios.py``), thin specs over the sweep subsystem
+  (``core/sweeps.py``: chunked/sharded executors, ``SweepResult``
+  artifacts),
 
 — and converts engine trajectories into per-job flow times and slowdowns
 (:class:`OnlineSimResult`).  Arrival processes and size distributions come
@@ -28,7 +30,6 @@ for compatibility.
 
 from __future__ import annotations
 
-import functools
 from collections.abc import Sequence
 from typing import NamedTuple
 
@@ -37,7 +38,7 @@ import jax.numpy as jnp
 
 from repro.core import engine
 from repro.core.flowtime import speedup
-from repro.core.policies import Policy, make_policy, make_rank_policy
+from repro.core.policies import Policy
 from repro.core.scenarios import (  # noqa: F401  (re-exported public API)
     Scenario,
     deterministic_arrivals,
@@ -262,6 +263,9 @@ def load_sweep(
     scenario_kw: dict | None = None,
     n_chips: int | None = None,
     min_chips: int = 1,
+    chunk_seeds: int | None = None,
+    max_jobs_in_flight: int | None = None,
+    shard: bool = False,
 ) -> dict:
     """Sweep arrival rates × seeds × policies in one device call per policy.
 
@@ -270,13 +274,15 @@ def load_sweep(
     ``scenario`` selects the workload generator from the registry
     (``core/scenarios.py``); ``n_chips`` switches to the quantized
     whole-chips engine.  Returns ``{rate: {policy: mean-over-seeds of
-    `metric`}}``.
+    `metric`}}``.  The execution-scale knobs (seed chunking, device
+    sharding) pass through to ``core/sweeps.py``.
     """
     per_seed = load_sweep_raw(
         policies, rates, n_jobs=n_jobs, n_seeds=n_seeds, p=p,
         n_servers=n_servers, size_alpha=size_alpha, seed=seed, metric=metric,
         scenario=scenario, scenario_kw=scenario_kw, n_chips=n_chips,
-        min_chips=min_chips,
+        min_chips=min_chips, chunk_seeds=chunk_seeds,
+        max_jobs_in_flight=max_jobs_in_flight, shard=shard,
     )
     out = {}
     for ri, rate in enumerate(rates):
@@ -301,60 +307,27 @@ def load_sweep_raw(
     scenario_kw: dict | None = None,
     n_chips: int | None = None,
     min_chips: int = 1,
+    chunk_seeds: int | None = None,
+    max_jobs_in_flight: int | None = None,
+    shard: bool = False,
 ) -> dict:
     """Like ``load_sweep`` but returns the full ``[n_rates, n_seeds]`` array
-    of per-seed metrics for each policy (for CIs, paired tests, plotting)."""
-    if metric not in OnlineSimResult._fields:
-        raise ValueError(f"unknown metric {metric!r}")
-    keys = jax.random.split(jax.random.PRNGKey(seed), n_seeds)
-    rates_arr = jnp.asarray(rates, dtype=jnp.result_type(float))
-    scn_kw = tuple(sorted((scenario_kw or {}).items()))
+    of per-seed metrics for each policy (for CIs, paired tests, plotting).
 
-    out = {}
-    for name in policies:
-        f = _sweep_fn(name, n_jobs, p, float(n_servers), size_alpha, metric,
-                      scenario, scn_kw, n_chips, min_chips)
-        out[name] = f(keys, rates_arr)  # [n_rates, n_seeds]
-    return out
+    Since the sweep-subsystem refactor this is a thin spec over
+    ``core/sweeps.py`` (golden-pinned bit-for-bit against the historical
+    jit+vmap path), which is also where the scale knobs live:
+    ``chunk_seeds``/``max_jobs_in_flight`` bound memory via seed-chunked
+    ``lax.map`` execution, ``shard=True`` splits seeds across devices.
+    """
+    from repro.core.sweeps import Sweep, run_sweep
 
-
-@functools.lru_cache(maxsize=64)
-def _sweep_fn(name, n_jobs, p, n_servers, size_alpha, metric, scenario,
-              scn_kw, n_chips, min_chips):
-    """Persistent jitted sweep per parameter set, so repeat calls (and a
-    warmup before timing) hit XLA's compilation cache instead of rebuilding
-    a fresh ``jax.jit`` object each time."""
-    from repro.core.scenarios import _any_pos
-
-    kw = dict(scn_kw)
-    sampler = make_scenario(scenario, size_alpha=size_alpha, p=p, **kw)
-    noisy = _any_pos(kw.get("sigma_size", 0.0)) or _any_pos(kw.get("sigma_p", 0.0))
-    # Sort-free ranked scan where the policy allows it (heSRPT, EQUI,
-    # SRPT — ~20x faster at M=1000); generic sort-per-event otherwise.
-    # Estimation noise and chip quantization both break the carried-rank
-    # invariants, scenarios that draw per-job exponents (``p_job``, the
-    # multi-class case) have rates that are not monotone in remaining
-    # size, and p-drift regime boundaries (``p_drift``) are events the
-    # ranked scan does not model — all of those fall back to the generic
-    # sort-per-event path.  (``scn.p_job``/``scn.p_drift`` are static per
-    # sampler, so the branch below is resolved at trace time, not per
-    # step.)
-    rank_pol = make_rank_policy(name) if n_chips is None and not noisy else None
-    pol = make_policy(
-        name, n_servers=(n_chips if n_chips is not None else n_servers)
+    spec = Sweep.create(
+        policies, rates, scenario=scenario, scenario_kw=scenario_kw,
+        n_jobs=n_jobs, n_seeds=n_seeds, seed=seed, p=p, n_servers=n_servers,
+        size_alpha=size_alpha, n_chips=n_chips, min_chips=min_chips,
+        metrics=(metric,),
     )
-
-    def one(key, rate):
-        scn = sampler(key, n_jobs, rate)
-        if rank_pol is not None and scn.p_job is None and scn.p_drift is None:
-            res = simulate_online_ranked(
-                scn.x0, scn.arrival_times, p, n_servers, rank_pol
-            )
-        else:
-            res = simulate_scenario(
-                scn, p, n_servers, pol, n_chips=n_chips, min_chips=min_chips
-            )
-        return getattr(res, metric)
-
-    return jax.jit(jax.vmap(jax.vmap(one, in_axes=(0, None)),
-                            in_axes=(None, 0)))
+    res = run_sweep(spec, chunk_seeds=chunk_seeds,
+                    max_jobs_in_flight=max_jobs_in_flight, shard=shard)
+    return {name: res.stats[name][metric] for name in spec.policies}

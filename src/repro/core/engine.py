@@ -59,7 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flowtime import speedup
-from repro.core.policies import Policy
+from repro.core.policies import Policy, knee
 
 # (x_active, p) -> (alloc, rate); ``alloc`` is theta for continuous rules
 # and integer chips for quantized rules, ``rate`` the per-job service rate.
@@ -157,6 +157,38 @@ class EngineResult(NamedTuple):
 
 
 # ----------------------------------------------------------- allocation rules
+def finish_alloc(
+    theta: jax.Array,
+    p,
+    *,
+    n_alloc,
+    n_chips: int | None,
+    min_chips: int = 1,
+    snap_slices: bool = False,
+    slices: tuple[int, ...] = DEFAULT_SLICES,
+    dtype,
+):
+    """The ONE ``theta -> (alloc, rate)`` tail every allocation rule shares.
+
+    Continuous regime (``n_chips`` is None): the allocation is ``theta``
+    itself and the rate is ``s(theta * n_alloc)``.  Whole-chips regime:
+    largest-remainder rounding (:func:`quantize_allocation_jax`) with a
+    ``min_chips`` floor, optionally snapped to power-of-two ICI slices
+    (:func:`snap_to_slices_jax`), rate ``s(chips)``.  Centralized so the
+    stateless rules here, :func:`knee_rule`, the class-aware rules
+    (``core/multiclass.py``) and the estimating rules
+    (``core/estimation.py``) cannot desynchronize on quantization order or
+    the chip unit.
+    """
+    theta = theta.astype(dtype)
+    if n_chips is None:
+        return theta, speedup(theta * n_alloc, p)
+    chips = quantize_allocation_jax(theta, n_chips, min_chips=min_chips)
+    if snap_slices:
+        chips = snap_to_slices_jax(chips, n_chips, slices=slices)
+    return chips, speedup(chips.astype(dtype), p)
+
+
 def continuous_rule(
     policy: Policy,
     n_servers,
@@ -177,8 +209,10 @@ def continuous_rule(
     def rule(x_act, p):
         x_seen = x_act if size_factors is None else x_act * size_factors
         p_seen = p if p_hat is None else p_hat
-        theta = policy(x_seen, p_seen).astype(dtype)
-        return theta, speedup(theta * n_servers, p)
+        return finish_alloc(
+            policy(x_seen, p_seen), p, n_alloc=n_servers, n_chips=None,
+            dtype=dtype,
+        )
 
     return rule
 
@@ -208,13 +242,56 @@ def quantized_rule(
     def rule(x_act, p):
         x_seen = x_act if size_factors is None else x_act * size_factors
         p_seen = p if p_hat is None else p_hat
-        theta = policy(x_seen, p_seen).astype(dtype)
-        chips = quantize_allocation_jax(theta, n_chips, min_chips=min_chips)
-        if snap_slices:
-            chips = snap_to_slices_jax(chips, n_chips, slices=slices)
-        return chips, speedup(chips.astype(dtype), p)
+        return finish_alloc(
+            policy(x_seen, p_seen), p, n_alloc=n_chips, n_chips=n_chips,
+            min_chips=min_chips, snap_slices=snap_slices, slices=slices,
+            dtype=dtype,
+        )
 
     return rule
+
+
+def knee_rule(
+    n_servers,
+    *,
+    n_chips: int | None = None,
+    min_chips: int = 1,
+    snap_slices: bool = False,
+    dtype,
+) -> StatefulRule:
+    """KNEE with its per-epoch ``alpha`` refit, as an engine rule.
+
+    The per-event ``ClusterScheduler`` loop re-derives KNEE's knob at every
+    decision epoch — ``alpha = median(remaining work of active jobs) * p /
+    N`` — which made KNEE the last policy stuck on the Python-only path:
+    ``make_policy("knee")`` closes over a *static* alpha.  The refit is a
+    pure function of the epoch's active set, so inside the scan it is simply
+    recomputed by ``allocate`` each step; the returned
+    :class:`StatefulRule` therefore carries the trivial (empty) state — the
+    statefulness lives in the per-epoch recomputation, not the carry.  The
+    masked median matches ``np.median`` over the active subset exactly
+    (average of the two middle order statistics), so the per-event Python
+    loop remains the bit-for-bit cross-check oracle.
+
+    Continuous when ``n_chips`` is None, else whole chips (largest-remainder
+    + min-chips floor, optionally slice-snapped) — the same regime split as
+    :func:`continuous_rule` / :func:`quantized_rule`.
+    """
+    n_alloc = float(n_chips) if n_chips is not None else float(n_servers)
+
+    def rule(x_act, p):
+        active = x_act > 0
+        m = jnp.maximum(jnp.sum(active, dtype=jnp.int32), 1)
+        v = jnp.sort(jnp.where(active, x_act, jnp.inf))
+        med = 0.5 * (v[(m - 1) // 2] + v[m // 2])
+        alpha = med * p / n_alloc
+        theta = knee(x_act, p, jnp.asarray(n_alloc, dtype), alpha)
+        return finish_alloc(
+            theta, p, n_alloc=n_alloc, n_chips=n_chips, min_chips=min_chips,
+            snap_slices=snap_slices, dtype=dtype,
+        )
+
+    return as_stateful(rule)
 
 
 # ------------------------------------------------------------ the event scan
@@ -629,6 +706,8 @@ __all__ = [
     "StatefulRule",
     "as_stateful",
     "continuous_rule",
+    "finish_alloc",
+    "knee_rule",
     "quantize_allocation_jax",
     "quantized_rule",
     "run",

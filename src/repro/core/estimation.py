@@ -49,7 +49,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.flowtime import speedup
 from repro.core.policies import Policy
 
 #: Clip bounds shared with the NumPy estimator (p=0 and p=1 are both
@@ -212,18 +211,16 @@ def p_hat_classes(
 # ------------------------------------------------------ the stateful rules
 def _rule_parts(n_alloc, n_chips, min_chips, snap_slices, dtype, discount):
     """The allocate tail (theta -> alloc, true-p rate) and the observe
-    closure shared by both estimating rules — ONE implementation so the
-    single-class and class-aware paths cannot desynchronize on
-    quantization order or the observation's chip unit."""
+    closure shared by both estimating rules — delegating the tail to
+    ``engine.finish_alloc``, the ONE implementation every rule family
+    uses, so the paths cannot desynchronize on quantization order or the
+    observation's chip unit."""
 
     def finish(theta, p):
-        theta = theta.astype(dtype)
-        if n_chips is None:
-            return theta, speedup(theta * n_alloc, p)
-        chips = engine.quantize_allocation_jax(theta, n_chips, min_chips=min_chips)
-        if snap_slices:
-            chips = engine.snap_to_slices_jax(chips, n_chips)
-        return chips, speedup(chips.astype(dtype), p)
+        return engine.finish_alloc(
+            theta, p, n_alloc=n_alloc, n_chips=n_chips, min_chips=min_chips,
+            snap_slices=snap_slices, dtype=dtype,
+        )
 
     def observe(state, obs):
         # Continuous rules allocate theta; the estimator regresses on the

@@ -43,7 +43,6 @@ cross-checks the engine against it event-for-event.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -57,7 +56,6 @@ from repro.core.arrivals import (
     simulate_online,
     simulate_online_quantized,
 )
-from repro.core.flowtime import speedup
 from repro.core.policies import (
     hesrpt,
     hesrpt_per_class,
@@ -208,8 +206,43 @@ def _multiclass_bursty(
     )
 
 
+def _drift_multiclass(
+    key, n_jobs, rate, *, classes, p1, drift_frac=0.5, size_alpha=None, **_
+):
+    """Per-class time-varying drift: the ROADMAP "Next" regime.
+
+    A ``multiclass_poisson`` draw whose TRUE exponents change mid-stream:
+    class ``k`` drifts from its ``ClassSpec.p`` to ``p1[k]`` at
+    ``drift_frac`` of the stream's nominal span ``n_jobs / rate`` (the same
+    placement rule as the single-class drift scenarios, so the drift lands
+    mid-stream at every load of a sweep).  The scenario's ``PDrift`` uses
+    the per-job rows form (``values`` shape ``[2, M]``) — each job's
+    physics follow its OWN class's regime schedule, e.g. only the
+    communication-bound class degrades.  ``scn.p_job`` keeps the PRE-drift
+    exponents (what a stale scheduler believes); the engine's physics
+    follow ``p_drift`` wherever it is set.
+    """
+    del size_alpha
+    specs = as_specs(classes)
+    if len(p1) != len(specs):
+        raise ValueError(
+            f"p1 needs one post-drift exponent per class "
+            f"({len(p1)} != {len(specs)})"
+        )
+    scn = _multiclass_poisson(key, n_jobs, rate, classes=specs)
+    dtype = scn.x0.dtype
+    p1_job = jnp.asarray(p1, dtype)[scn.class_ids]
+    t_d = jnp.asarray(drift_frac * n_jobs / rate, dtype)
+    drift = engine.PDrift(
+        times=t_d[None],
+        values=jnp.stack([jnp.asarray(scn.p_job, dtype), p1_job]),
+    )
+    return scn._replace(p_drift=drift)
+
+
 SCENARIOS.setdefault("multiclass_poisson", _multiclass_poisson)
 SCENARIOS.setdefault("multiclass_bursty", _multiclass_bursty)
+SCENARIOS.setdefault("drift_multiclass", _drift_multiclass)
 
 
 # ------------------------------------------------- class-aware allocation
@@ -297,13 +330,10 @@ def class_rule(
         x_seen = x_act if size_factors is None else x_act * size_factors
         p_seen = p if p_hat is None else p_hat
         theta = class_theta(name, x_seen, p_seen, n_servers=n_alloc, w=w)
-        theta = theta.astype(dtype)
-        if n_chips is None:
-            return theta, speedup(theta * n_alloc, p)
-        chips = engine.quantize_allocation_jax(theta, n_chips, min_chips=min_chips)
-        if snap_slices:
-            chips = engine.snap_to_slices_jax(chips, n_chips)
-        return chips, speedup(chips.astype(dtype), p)
+        return engine.finish_alloc(
+            theta, p, n_alloc=n_alloc, n_chips=n_chips, min_chips=min_chips,
+            snap_slices=snap_slices, dtype=dtype,
+        )
 
     return rule
 
@@ -356,6 +386,7 @@ def simulate_multiclass(
     if (
         p_shared is not None
         and noiseless
+        and scn.p_drift is None  # drift physics need the generic engine run
         and estimator_kw is None
         and policy.lower() in ("hesrpt", "hesrpt_pc", "hesrpt_blind")
         and not (n_chips is not None and snap_slices)
@@ -463,59 +494,35 @@ def multiclass_sweep(
     n_chips: int | None = None,
     min_chips: int = 1,
     snap_slices: bool = False,
+    chunk_seeds: int | None = None,
+    max_jobs_in_flight: int | None = None,
+    shard: bool = False,
 ) -> dict:
-    """Sweep seeds x loads x class-aware policies: ONE jit+vmap device call
+    """Sweep seeds x loads x class-aware policies: ONE compiled device call
     per policy (the quantized-benchmark shape, now with per-job ``p``).
 
     Seeds are shared across rates and policies (paired sample paths).
     Returns ``{policy: {"mean_flowtime": [R,S], "mean_slowdown": [R,S],
     "class_flowtime": [R,S,K], "class_slowdown": [R,S,K]}}``.
+
+    Since the sweep-subsystem refactor this is a thin spec over
+    ``core/sweeps.py`` (golden-pinned bit-for-bit against the historical
+    jit+vmap path); ``chunk_seeds``/``max_jobs_in_flight``/``shard`` are
+    that engine's memory/device scale knobs.
     """
-    specs = as_specs(classes)
-    keys = jax.random.split(jax.random.PRNGKey(seed), n_seeds)
-    rates_arr = jnp.asarray(rates, dtype=jnp.result_type(float))
-    scn_kw = tuple(sorted((scenario_kw or {}).items()))
-    out = {}
-    for name in policies:
-        f = _mc_sweep_fn(
-            name, n_jobs, specs, float(n_servers), scenario, scn_kw,
-            n_chips, min_chips, snap_slices,
-        )
-        flows, slows, cf, cs = f(keys, rates_arr)
-        out[name] = {
-            "mean_flowtime": flows,
-            "mean_slowdown": slows,
-            "class_flowtime": cf,
-            "class_slowdown": cs,
-        }
-    return out
+    from repro.core.sweeps import Sweep, run_sweep
 
-
-@functools.lru_cache(maxsize=64)
-def _mc_sweep_fn(
-    name, n_jobs, specs, n_servers, scenario, scn_kw, n_chips, min_chips,
-    snap_slices,
-):
-    """Persistent jitted sweep per parameter set (same caching rationale as
-    ``arrivals._sweep_fn``)."""
-    from repro.core.scenarios import make_scenario
-
-    K = len(specs)
-    sampler = make_scenario(scenario, classes=specs, **dict(scn_kw))
-
-    def one(key, rate):
-        scn = sampler(key, n_jobs, rate)
-        res = simulate_multiclass(
-            scn, classes=specs, policy=name, n_servers=n_servers,
-            n_chips=n_chips, min_chips=min_chips, snap_slices=snap_slices,
-        )
-        cf = per_class_mean(res.flow_times, scn.class_ids, K)
-        cs = per_class_mean(res.slowdowns, scn.class_ids, K)
-        return res.mean_flowtime, res.mean_slowdown, cf, cs
-
-    return jax.jit(
-        jax.vmap(jax.vmap(one, in_axes=(0, None)), in_axes=(None, 0))
+    spec = Sweep.create(
+        policies, rates, scenario=scenario, scenario_kw=scenario_kw,
+        n_jobs=n_jobs, n_seeds=n_seeds, seed=seed, n_servers=n_servers,
+        n_chips=n_chips, min_chips=min_chips, snap_slices=snap_slices,
+        classes=as_specs(classes),
+        metrics=("mean_flowtime", "mean_slowdown", "class_flowtime",
+                 "class_slowdown"),
     )
+    res = run_sweep(spec, chunk_seeds=chunk_seeds,
+                    max_jobs_in_flight=max_jobs_in_flight, shard=shard)
+    return {name: dict(res.stats[name]) for name in spec.policies}
 
 
 __all__ = [

@@ -11,9 +11,11 @@ the workload the allocation engine (``core/engine.py``) is run against:
 - ``bursty`` — a 2-state MAP (Markov-modulated) on-off stream: interarrival
   gaps are Exp(rate_on) or Exp(rate_off) according to a persistent hidden
   state, producing the correlated bursts heavy-traffic studies care about.
-- ``multiclass_poisson`` / ``multiclass_bursty`` — K-class mixtures with
-  per-class speedup exponent, size distribution and arrival share; the
-  samplers live in ``core/multiclass.py`` and register here lazily.
+- ``multiclass_poisson`` / ``multiclass_bursty`` / ``drift_multiclass`` —
+  K-class mixtures with per-class speedup exponent, size distribution and
+  arrival share (``drift_multiclass`` additionally drifts every class's
+  true exponent mid-stream via per-job ``PDrift`` rows); the samplers live
+  in ``core/multiclass.py`` and register here lazily.
 - ``drift_poisson`` / ``drift_bursty`` — the estimation regime: the TRUE
   speedup exponent changes mid-run (``p0`` → ``p1`` at ``drift_frac`` of
   the stream's nominal span, e.g. the workload turning

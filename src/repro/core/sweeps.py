@@ -1,0 +1,658 @@
+"""One sweep subsystem: the declarative experiment engine behind every
+simulator.
+
+Every heavy-traffic experiment in this repo is the same shape — draw a
+scenario per ``(seed, rate)`` cell, run it through the allocation engine
+(``core/engine.py``), reduce to a few metrics, repeat for a handful of
+policies.  Historically each experiment re-implemented its own jit+vmap
+scaffolding (``load_sweep``/``load_sweep_raw``, ``multiclass_sweep``, and
+three divergent benchmark ``sweep()`` copies); none of them chunked memory,
+sharded across devices, or emitted machine-readable results.  This module
+is the single replacement path:
+
+- :class:`Sweep` — a hashable, declarative spec of the whole grid
+  (policies x rates x seeds, scenario + kwargs, single-class / multi-class
+  / estimation-arm regimes).  Specs are pure data: two equal specs share
+  one compiled executor.
+- :func:`run_sweep` — one compiled executor per policy, with three scale
+  layers the hand-rolled versions lacked:
+
+  1. **Chunked execution** — ``lax.map`` over seed-chunks of the inner
+     ``vmap`` so the number of simultaneously simulated jobs never exceeds
+     a ``max_jobs_in_flight`` memory budget; a 2,000-jobs x 200-seeds x
+     5-loads grid (2M simulated jobs per policy) runs on CPU without OOM.
+     Chunked results are bit-for-bit the unchunked ``vmap`` (tested).
+  2. **Device sharding** — opt-in ``shard_map`` over the seed axis (the
+     version-tolerant shims in ``models/common.py``), so multi-device
+     hosts split seeds across devices; sharded == single-device (tested
+     under ``XLA_FLAGS=--xla_force_host_platform_device_count``).
+  3. **Structured artifacts** — every run returns a :class:`SweepResult`
+     (spec, per-seed stats, wall/compile time, backend, chunking) that
+     serializes to JSON; every ``run_sweep`` call also appends a compact
+     record to the module :data:`RUN_LOG`, which ``benchmarks/run.py``
+     flushes to ``BENCH_sweeps.json`` so the perf trajectory accumulates
+     across commits.
+
+``load_sweep``/``load_sweep_raw`` (``core/arrivals.py``),
+``multiclass_sweep`` (``core/multiclass.py``) and the benchmark ``sweep()``
+functions are thin spec-plus-formatting wrappers over this module; golden
+pins in ``tests/test_sweeps.py`` hold the refactor to bit-for-bit f64
+agreement with the pre-refactor outputs.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, NamedTuple
+
+import numpy as np
+
+__all__ = [
+    "RUN_LOG",
+    "Sweep",
+    "SweepResult",
+    "bench_records",
+    "run_sweep",
+    "write_bench_json",
+]
+
+#: Metrics computed per class (shape ``[n_rates, n_seeds, K]``); everything
+#: else must be a scalar field of ``OnlineSimResult`` (``[n_rates, n_seeds]``).
+CLASS_METRICS = {
+    "class_flowtime": "flow_times",
+    "class_slowdown": "slowdowns",
+}
+
+#: Estimation-regime arms (see ``benchmarks/estimation.py``): how the policy
+#: learns the speedup exponent on a p-drift scenario.
+ARMS = ("oracle", "stale", "estimator")
+
+
+def _hashable(v):
+    """Coerce JSON-ish values (lists, dicts, ClassSpec rows) to hashables."""
+    if isinstance(v, dict):
+        return tuple(sorted((k, _hashable(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_hashable(x) for x in v)
+    return v
+
+
+class Sweep(NamedTuple):
+    """Declarative sweep spec: pure hashable data, no arrays, no closures.
+
+    Use :meth:`Sweep.create` (it normalizes sequences/dicts into the
+    hashable tuples jit caching needs).  The spec pins *what* is simulated;
+    execution strategy (chunking, sharding) is a :func:`run_sweep` argument
+    so the same spec produces identical numbers under any strategy.
+    """
+
+    policies: tuple[str, ...]
+    rates: tuple[float, ...]
+    scenario: str = "poisson"
+    scenario_kw: tuple = ()
+    n_jobs: int = 1000
+    n_seeds: int = 100
+    seed: int = 0
+    p: float = 0.5
+    n_servers: float = 256.0
+    size_alpha: float = 1.5
+    n_chips: int | None = None
+    min_chips: int = 1
+    snap_slices: bool = False
+    classes: tuple | None = None  # tuple[ClassSpec, ...] for multi-class
+    metrics: tuple[str, ...] = ("mean_flowtime",)
+    arm: str | None = None  # estimation regime: oracle | stale | estimator
+    arm_kw: tuple = ()  # e.g. (("discount", 0.9), ("prior_weight", 1.0))
+
+    @classmethod
+    def create(
+        cls,
+        policies,
+        rates,
+        *,
+        scenario: str = "poisson",
+        scenario_kw: dict | tuple | None = None,
+        n_jobs: int = 1000,
+        n_seeds: int = 100,
+        seed: int = 0,
+        p: float = 0.5,
+        n_servers: float = 256.0,
+        size_alpha: float = 1.5,
+        n_chips: int | None = None,
+        min_chips: int = 1,
+        snap_slices: bool = False,
+        classes=None,
+        metrics=None,
+        arm: str | None = None,
+        arm_kw: dict | tuple | None = None,
+    ) -> "Sweep":
+        from repro.core.arrivals import OnlineSimResult
+        from repro.core.multiclass import as_specs
+
+        if classes is not None:
+            classes = as_specs(classes)
+        if metrics is None:
+            metrics = (
+                ("mean_flowtime", "mean_slowdown", "class_flowtime",
+                 "class_slowdown")
+                if classes is not None
+                else ("mean_flowtime",)
+            )
+        metrics = tuple(metrics)
+        for m in metrics:
+            if m in CLASS_METRICS:
+                if classes is None:
+                    raise ValueError(f"metric {m!r} needs a multi-class sweep")
+            elif m not in OnlineSimResult._fields:
+                raise ValueError(f"unknown metric {m!r}")
+        if arm is not None and arm not in ARMS:
+            raise ValueError(f"unknown arm {arm!r}; known: {ARMS}")
+        if arm is not None and classes is not None:
+            raise ValueError("estimation arms are single-class sweeps")
+        if arm is not None and n_chips is not None:
+            # The arm cells run the continuous simulators; accepting n_chips
+            # would record a "quantized" spec whose physics were continuous.
+            raise ValueError("estimation arms are continuous-only (no n_chips)")
+        if arm is not None and "p0" not in dict(_hashable(scenario_kw or {})):
+            # Without an explicit p0 the stale arm would pin its belief to
+            # the generic default ``p`` while the drift sampler uses its
+            # OWN p0 default — a silently wrong three-arm comparison.
+            raise ValueError(
+                "estimation arms need scenario_kw['p0'] (the pre-drift "
+                "exponent the stale/estimator arms anchor their belief to)"
+            )
+        if snap_slices and classes is None:
+            raise ValueError("snap_slices is only wired for multi-class sweeps")
+        return cls(
+            policies=tuple(policies),
+            rates=tuple(float(r) for r in rates),
+            scenario=scenario,
+            scenario_kw=_hashable(scenario_kw or {}),
+            n_jobs=int(n_jobs),
+            n_seeds=int(n_seeds),
+            seed=int(seed),
+            p=float(p),
+            n_servers=float(n_servers),
+            size_alpha=float(size_alpha),
+            n_chips=None if n_chips is None else int(n_chips),
+            min_chips=int(min_chips),
+            snap_slices=bool(snap_slices),
+            classes=classes,
+            metrics=metrics,
+            arm=arm,
+            arm_kw=_hashable(arm_kw or {}),
+        )
+
+    def jobs_per_seed(self) -> int:
+        """Simulated jobs one seed contributes across the rate axis."""
+        return len(self.rates) * self.n_jobs
+
+    def total_jobs(self) -> int:
+        """Simulated jobs in the whole grid, per policy."""
+        return self.n_seeds * self.jobs_per_seed()
+
+
+# --------------------------------------------------------- per-cell functions
+def _cell_fn(spec: Sweep, name: str):
+    """Build ``one(key, rate) -> tuple_of_metrics`` for one policy.
+
+    These closures are verbatim ports of the per-experiment bodies this
+    module replaced (the jit+vmap closures that lived in
+    ``core/arrivals.py``, ``core/multiclass.py`` and
+    ``benchmarks/estimation.py`` before the refactor) — same sampler
+    construction, same fast-path dispatch — which is what lets the
+    golden-pin tests demand bit-for-bit f64 agreement with the
+    pre-refactor sweeps.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.analysis import per_class_mean
+    from repro.core.scenarios import make_scenario
+
+    kw = dict(spec.scenario_kw)
+
+    def metrics_of(res, scn):
+        out = []
+        for m in spec.metrics:
+            if m in CLASS_METRICS:
+                out.append(
+                    per_class_mean(
+                        getattr(res, CLASS_METRICS[m]),
+                        scn.class_ids,
+                        len(spec.classes),
+                    )
+                )
+            else:
+                out.append(getattr(res, m))
+        return tuple(out)
+
+    if spec.classes is not None:
+        from repro.core.multiclass import simulate_multiclass
+
+        sampler = make_scenario(
+            spec.scenario, size_alpha=spec.size_alpha, p=spec.p,
+            classes=spec.classes, **kw,
+        )
+
+        def one(key, rate):
+            scn = sampler(key, spec.n_jobs, rate)
+            res = simulate_multiclass(
+                scn,
+                classes=spec.classes,
+                policy=name,
+                n_servers=spec.n_servers,
+                n_chips=spec.n_chips,
+                min_chips=spec.min_chips,
+                snap_slices=spec.snap_slices,
+            )
+            return metrics_of(res, scn)
+
+        return one
+
+    sampler = make_scenario(
+        spec.scenario, size_alpha=spec.size_alpha, p=spec.p, **kw
+    )
+
+    if spec.arm is not None:
+        from repro.core.arrivals import simulate_scenario
+        from repro.core.estimation import simulate_scenario_estimated
+        from repro.core.policies import make_policy
+
+        akw = dict(spec.arm_kw)
+        p0 = kw["p0"]  # presence enforced by Sweep.create
+        pol = make_policy(name, n_servers=spec.n_servers)
+
+        def one(key, rate):
+            scn = sampler(key, spec.n_jobs, rate)
+            if spec.arm == "oracle":
+                # simulate_scenario shows the rule the CURRENT true regime.
+                res = simulate_scenario(scn, p0, spec.n_servers, pol)
+            elif spec.arm == "stale":
+                # a pinned p_hat: the scheduler never notices the drift.
+                res = simulate_scenario(
+                    scn._replace(p_hat=jnp.asarray(p0)), p0, spec.n_servers,
+                    pol,
+                )
+            else:  # estimator: allocate with the online blended p-hat
+                res = simulate_scenario_estimated(
+                    scn, p0, spec.n_servers, pol, prior_p=p0,
+                    prior_weight=akw.get("prior_weight", 1.0),
+                    discount=akw.get("discount", 1.0),
+                )
+            return metrics_of(res, scn)
+
+        return one
+
+    from repro.core.arrivals import simulate_online_ranked, simulate_scenario
+    from repro.core.policies import make_policy, make_rank_policy
+    from repro.core.scenarios import _any_pos
+
+    noisy = _any_pos(kw.get("sigma_size", 0.0)) or _any_pos(
+        kw.get("sigma_p", 0.0)
+    )
+    # Sort-free ranked scan where the policy allows it (heSRPT, EQUI,
+    # SRPT — ~20x faster at M=1000); generic sort-per-event otherwise.
+    # Estimation noise and chip quantization both break the carried-rank
+    # invariants; per-job exponents (``p_job``) and p-drift boundaries
+    # (``p_drift``) are static per sampler, so the branch is resolved at
+    # trace time.
+    rank_pol = (
+        make_rank_policy(name) if spec.n_chips is None and not noisy else None
+    )
+    pol = make_policy(
+        name,
+        n_servers=(
+            spec.n_chips if spec.n_chips is not None else spec.n_servers
+        ),
+    )
+
+    def one(key, rate):
+        scn = sampler(key, spec.n_jobs, rate)
+        if rank_pol is not None and scn.p_job is None and scn.p_drift is None:
+            res = simulate_online_ranked(
+                scn.x0, scn.arrival_times, spec.p, spec.n_servers, rank_pol
+            )
+        else:
+            res = simulate_scenario(
+                scn, spec.p, spec.n_servers, pol, n_chips=spec.n_chips,
+                min_chips=spec.min_chips,
+            )
+        return metrics_of(res, scn)
+
+    return one
+
+
+# ------------------------------------------------------------- the executors
+def _metric_ndim(spec: Sweep, metric: str) -> int:
+    """Trailing rank of one cell's value for ``metric`` (0 or 1)."""
+    return 1 if metric in CLASS_METRICS else 0
+
+
+def _build_fn(spec: Sweep, name: str, chunk: int | None, shard: bool):
+    """The pure ``(keys, rates) -> tuple_of_metric_arrays`` a policy runs.
+
+    ``keys`` may be padded to the shard grid; each metric comes back
+    ``[n_rates, len(keys)(, K)]``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    one = _cell_fn(spec, name)
+    inner = jax.vmap(jax.vmap(one, in_axes=(0, None)), in_axes=(None, 0))
+    R = len(spec.rates)
+
+    def over_seeds(keys, rates):
+        s_local = keys.shape[0]
+        if chunk is None or chunk >= s_local:
+            return inner(keys, rates)
+        n_chunks = -(-s_local // chunk)
+        pad = n_chunks * chunk - s_local
+        kp = jnp.concatenate([keys, keys[:1].repeat(pad, axis=0)]) if pad else keys
+        kc = kp.reshape(n_chunks, chunk, *keys.shape[1:])
+        # lax.map: one chunk of seeds resident at a time — the memory
+        # budget — while each chunk still runs the full vmap'd grid.
+        outs = jax.lax.map(lambda k: inner(k, rates), kc)
+        return tuple(
+            jnp.moveaxis(a, 0, 1).reshape(R, n_chunks * chunk, *a.shape[3:])[
+                :, :s_local
+            ]
+            for a in outs
+        )
+
+    if not shard:
+        return over_seeds
+
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.models.common import shard_map
+
+    devices = np.asarray(jax.devices())
+    mesh = Mesh(devices, ("seeds",))
+    out_specs = tuple(
+        P(None, "seeds", *(None,) * _metric_ndim(spec, m))
+        for m in spec.metrics
+    )
+
+    def sharded(keys, rates):
+        return shard_map(
+            over_seeds,
+            mesh=mesh,
+            in_specs=(P("seeds"), P()),
+            out_specs=out_specs,
+        )(keys, rates)
+
+    return sharded
+
+
+# Compiled-executor cache: one AOT-compiled callable per (spec-sans-policies,
+# policy, padded seed count, chunk, shard) — repeat run_sweep calls (and the
+# benchmarks' warmup-before-timing idiom) reuse it instead of recompiling.
+# Bounded like the lru_cache(64) it replaced: oldest entry evicted first
+# (dict preserves insertion order), so long-lived processes sweeping many
+# distinct configs plateau instead of accumulating executables forever.
+_EXECUTORS: dict[tuple, Any] = {}
+_EXECUTORS_MAX = 64
+
+
+def _executor(spec: Sweep, name: str, keys, rates, chunk: int | None,
+              shard: bool):
+    """Return ``(compiled, compile_seconds)`` for one policy column."""
+    import jax
+
+    cache_key = (
+        spec._replace(policies=()), name, int(keys.shape[0]), chunk, shard,
+        str(keys.dtype), str(rates.dtype),
+    )
+    hit = _EXECUTORS.get(cache_key)
+    if hit is not None:
+        # LRU refresh: re-insert so hot executors survive the eviction
+        # sweep below (dict preserves insertion order).
+        _EXECUTORS[cache_key] = _EXECUTORS.pop(cache_key)
+        return hit, 0.0
+    f = _build_fn(spec, name, chunk, shard)
+    t0 = time.perf_counter()
+    compiled = jax.jit(f).lower(keys, rates).compile()
+    compile_s = time.perf_counter() - t0
+    while len(_EXECUTORS) >= _EXECUTORS_MAX:
+        _EXECUTORS.pop(next(iter(_EXECUTORS)))
+    _EXECUTORS[cache_key] = compiled
+    return compiled, compile_s
+
+
+def resolve_chunk(spec: Sweep, chunk_seeds: int | None,
+                  max_jobs_in_flight: int | None) -> int | None:
+    """Seed-chunk size from an explicit count or a jobs-in-flight budget.
+
+    The inner vmap materializes ``chunk * n_rates * n_jobs`` jobs at once;
+    ``max_jobs_in_flight`` caps that product (floor: one seed per chunk).
+    """
+    if chunk_seeds is not None and max_jobs_in_flight is not None:
+        raise ValueError("pass chunk_seeds or max_jobs_in_flight, not both")
+    if max_jobs_in_flight is not None:
+        return max(1, int(max_jobs_in_flight) // spec.jobs_per_seed())
+    return None if chunk_seeds is None else max(1, int(chunk_seeds))
+
+
+class SweepResult(NamedTuple):
+    """A completed sweep: the spec, per-seed stats, and how it ran.
+
+    ``stats[policy][metric]`` is a numpy array ``[n_rates, n_seeds]`` (or
+    ``[n_rates, n_seeds, K]`` for per-class metrics).  ``compile_s`` is 0.0
+    when every executor was already cached.  Serializes with
+    :meth:`to_json` / :meth:`from_json` (exact float round-trip) and
+    compacts to a ``BENCH_sweeps.json`` record with :meth:`record`.
+
+    ``spec`` is normally a :class:`Sweep`; benchmarks whose grid is not a
+    (policies x rates x seeds) sweep — e.g. ``benchmarks/sched_scale.py``
+    times decision epochs over job counts M — report through the same
+    container with a plain params dict carrying a ``"kind"`` tag (their
+    ``stats`` rows are then indexed by that grid instead of rates).
+    """
+
+    spec: "Sweep | dict"
+    stats: dict[str, dict[str, np.ndarray]]
+    wall_s: float
+    compile_s: float
+    backend: str
+    device_count: int
+    chunk_seeds: int | None
+    sharded: bool
+
+    # ------------------------------------------------------------ read-outs
+    def per_seed(self, policy: str, metric: str | None = None) -> np.ndarray:
+        metric = metric or self.spec.metrics[0]
+        return self.stats[policy][metric]
+
+    def cell_means(self, metric: str | None = None) -> dict:
+        """``{rate: {policy: mean-over-seeds}}`` — the ``load_sweep`` shape."""
+        metric = metric or self.spec.metrics[0]
+        out: dict[float, dict[str, float]] = {}
+        for ri, rate in enumerate(self.spec.rates):
+            out[float(rate)] = {
+                name: float(np.mean(self.stats[name][metric][ri]))
+                for name in self.spec.policies
+            }
+        return out
+
+    # -------------------------------------------------------- serialization
+    def _spec_jsonable(self) -> dict:
+        if isinstance(self.spec, dict):
+            return dict(self.spec)
+        d = self.spec._asdict()
+        d["scenario_kw"] = [list(kv) for kv in self.spec.scenario_kw]
+        d["arm_kw"] = [list(kv) for kv in self.spec.arm_kw]
+        if self.spec.classes is not None:
+            d["classes"] = [list(c) for c in self.spec.classes]
+        d["policies"] = list(self.spec.policies)
+        d["rates"] = list(self.spec.rates)
+        d["metrics"] = list(self.spec.metrics)
+        return d
+
+    def record(self) -> dict:
+        """Compact JSON-able record (per-cell mean/std, not per-seed rows) —
+        the unit ``BENCH_sweeps.json`` accumulates."""
+        from repro.core.analysis import seed_axis_stats
+
+        cells = {
+            name: {metric: seed_axis_stats(a) for metric, a in by_m.items()}
+            for name, by_m in self.stats.items()
+        }
+        is_sweep = isinstance(self.spec, Sweep)
+        return {
+            "kind": "sweep" if is_sweep else self.spec.get("kind", "bench"),
+            "spec": self._spec_jsonable(),
+            "cells": cells,
+            "n_seeds": self.spec.n_seeds if is_sweep else None,
+            "total_jobs": (
+                self.spec.total_jobs() * len(self.spec.policies)
+                if is_sweep else None
+            ),
+            "wall_s": self.wall_s,
+            "compile_s": self.compile_s,
+            "backend": self.backend,
+            "device_count": self.device_count,
+            "chunk_seeds": self.chunk_seeds,
+            "sharded": self.sharded,
+        }
+
+    def to_json(self) -> str:
+        """Full serialization including the per-seed arrays (exact float
+        round-trip: ``json`` emits ``repr`` floats)."""
+        return json.dumps(
+            {
+                "spec": self._spec_jsonable(),
+                "stats": {
+                    name: {m: a.tolist() for m, a in by_m.items()}
+                    for name, by_m in self.stats.items()
+                },
+                "wall_s": self.wall_s,
+                "compile_s": self.compile_s,
+                "backend": self.backend,
+                "device_count": self.device_count,
+                "chunk_seeds": self.chunk_seeds,
+                "sharded": self.sharded,
+            }
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "SweepResult":
+        d = json.loads(text)
+        s = d["spec"]
+        if "policies" not in s:  # dict-spec result (e.g. sched_scale)
+            return cls(
+                spec=s,
+                stats={
+                    name: {
+                        m: np.asarray(v, dtype=np.float64)
+                        for m, v in by_m.items()
+                    }
+                    for name, by_m in d["stats"].items()
+                },
+                wall_s=d["wall_s"], compile_s=d["compile_s"],
+                backend=d["backend"], device_count=d["device_count"],
+                chunk_seeds=d["chunk_seeds"], sharded=d["sharded"],
+            )
+        spec = Sweep.create(
+            s["policies"], s["rates"], scenario=s["scenario"],
+            scenario_kw=dict((k, _hashable(v)) for k, v in s["scenario_kw"]),
+            n_jobs=s["n_jobs"], n_seeds=s["n_seeds"], seed=s["seed"],
+            p=s["p"], n_servers=s["n_servers"], size_alpha=s["size_alpha"],
+            n_chips=s["n_chips"], min_chips=s["min_chips"],
+            snap_slices=s["snap_slices"], classes=s["classes"],
+            metrics=s["metrics"], arm=s["arm"],
+            arm_kw=dict((k, _hashable(v)) for k, v in s["arm_kw"]),
+        )
+        stats = {
+            name: {m: np.asarray(v, dtype=np.float64) for m, v in by_m.items()}
+            for name, by_m in d["stats"].items()
+        }
+        return cls(
+            spec=spec, stats=stats, wall_s=d["wall_s"],
+            compile_s=d["compile_s"], backend=d["backend"],
+            device_count=d["device_count"], chunk_seeds=d["chunk_seeds"],
+            sharded=d["sharded"],
+        )
+
+
+#: Every ``run_sweep`` (and ``benchmarks/sched_scale.py``) appends its
+#: compact record here; ``benchmarks/run.py`` flushes it to
+#: ``BENCH_sweeps.json``.  Process-scoped by design (a benchmark run is
+#: one fresh process) and bounded: long-lived sessions hammering
+#: ``load_sweep`` keep only the most recent records.
+RUN_LOG: list[dict] = []
+RUN_LOG_MAX = 512
+
+
+def bench_records() -> list[dict]:
+    return list(RUN_LOG)
+
+
+def write_bench_json(path: str = "BENCH_sweeps.json") -> str:
+    """Flush the run log to ``path`` (the perf-trajectory artifact)."""
+    with open(path, "w") as f:
+        json.dump({"records": RUN_LOG}, f, indent=1)
+    return path
+
+
+def run_sweep(
+    spec: Sweep,
+    *,
+    chunk_seeds: int | None = None,
+    max_jobs_in_flight: int | None = None,
+    shard: bool = False,
+    log: bool = True,
+) -> SweepResult:
+    """Execute a :class:`Sweep`: one compiled device call per policy.
+
+    Seeds are shared across rates and policies (paired sample paths), so
+    "policy A beats policy B at every load" is tested on identical draws.
+
+    ``chunk_seeds`` / ``max_jobs_in_flight`` bound memory by running the
+    seed axis in ``lax.map`` chunks (identical results); ``shard=True``
+    additionally splits the seed axis across ``jax.devices()`` with
+    ``shard_map`` (identical results; pass it on multi-device hosts).
+    ``log=False`` keeps the run out of :data:`RUN_LOG` (used by tests).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    chunk = resolve_chunk(spec, chunk_seeds, max_jobs_in_flight)
+    keys = jax.random.split(jax.random.PRNGKey(spec.seed), spec.n_seeds)
+    rates = jnp.asarray(spec.rates, dtype=jnp.result_type(float))
+
+    n_dev = jax.device_count() if shard else 1
+    S = spec.n_seeds
+    s_pad = -(-S // n_dev) * n_dev  # shard grid; chunk pads inside the shard
+    if s_pad > S:
+        keys = jnp.concatenate([keys, keys[:1].repeat(s_pad - S, axis=0)])
+    if chunk is not None and chunk >= s_pad // n_dev:
+        chunk = None  # one chunk == the plain vmap; share its executor
+
+    stats: dict[str, dict[str, np.ndarray]] = {}
+    compile_s = 0.0
+    wall_s = 0.0
+    for name in spec.policies:
+        f, c_s = _executor(spec, name, keys, rates, chunk, shard)
+        compile_s += c_s
+        t0 = time.perf_counter()
+        out = f(keys, rates)
+        out = tuple(np.asarray(a) for a in out)  # blocks until ready
+        wall_s += time.perf_counter() - t0
+        stats[name] = {
+            m: a[:, :S] for m, a in zip(spec.metrics, out, strict=True)
+        }
+    result = SweepResult(
+        spec=spec,
+        stats=stats,
+        wall_s=wall_s,
+        compile_s=compile_s,
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        chunk_seeds=chunk,
+        sharded=shard,
+    )
+    if log:
+        RUN_LOG.append(result.record())
+        del RUN_LOG[:-RUN_LOG_MAX]
+    return result

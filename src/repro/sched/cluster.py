@@ -26,11 +26,13 @@ exponent; the engine runs it as a *stateful* allocation rule
 (``core/estimation.py`` — recursive WLS carried through the scan), with
 this per-event loop demoted to the cross-check oracle (flows agree to
 ~1e-10 given the identical observation schedule: one observation per job
-per epoch, after the advance).  The per-event Python path
+per epoch, after the advance).  KNEE's per-epoch alpha refit — the last
+Python-only policy path — now delegates too (``core.engine.knee_rule``
+recomputes the masked median inside the scan).  The per-event Python path
 (``allocations`` / ``advance_fluid``) remains both oracle and fallback
-for the remaining stateful feature (per-epoch KNEE alpha) and for
-heterogeneous p without ``class_aware``; ``sched/elastic.py`` uses it to
-drive real training jobs through ``report_progress``.
+for heterogeneous p without ``class_aware`` (and KNEE under
+``use_estimator``); ``sched/elastic.py`` uses it to drive real training
+jobs through ``report_progress``.
 """
 
 from __future__ import annotations
@@ -320,10 +322,11 @@ class ClusterScheduler:
             return False
         if self.class_aware:
             return self.policy_name.lower() in MULTICLASS_POLICY_NAMES
-        if self.policy_name.lower() == "knee":
-            return False
         if self.use_estimator:
-            return True  # per-job true-p physics: any p mix delegates
+            # per-job true-p physics: any p mix delegates.  KNEE is the one
+            # exception: ``estimating_rule`` wraps a static Policy, and
+            # KNEE's per-epoch alpha refit is not threaded through it.
+            return self.policy_name.lower() != "knee"
         return len({j.p for j in act}) <= 1
 
     def _run_fluid_engine(self) -> dict:
@@ -427,6 +430,19 @@ class ClusterScheduler:
                     min_chips=self.min_chips,
                     snap_slices=self.snap_slices,
                     **est_kw,
+                )
+            elif self.policy_name.lower() == "knee":
+                # KNEE refits its alpha from the active set at every epoch;
+                # the engine rule recomputes the same masked median inside
+                # the scan (``core.engine.knee_rule``), which retired the
+                # last Python-only policy path.
+                p_arg = p = self.effective_p()
+                rule = _engine.knee_rule(
+                    float(self.n_chips),
+                    n_chips=self.n_chips if self.quantize else None,
+                    min_chips=self.min_chips,
+                    snap_slices=self.snap_slices,
+                    dtype=dtype,
                 )
             elif self.quantize:
                 p_arg = p = self.effective_p()

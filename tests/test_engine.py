@@ -260,14 +260,39 @@ def test_bursty_arrivals_are_bursty():
 
 
 def test_cluster_engine_fallbacks_preserved():
-    """Estimator / heterogeneous-p / knee instances must take the Python
-    path (engine models a pure uniform-p rule) and still complete."""
+    """Heterogeneous-p instances must take the Python path (the plain
+    single-class engine rule models one uniform p) and still complete."""
     sched = ClusterScheduler(16, policy="hesrpt")
     sched.add_job(Job("a", size=4.0, p=0.3))
     sched.add_job(Job("b", size=2.0, p=0.7))  # heterogeneous p
     assert not sched._engine_eligible()
     res = sched.run_fluid_to_completion()
     assert res["makespan"] > 0
-    sched2 = ClusterScheduler(16, policy="knee")
-    sched2.add_job(Job("a", size=4.0, p=0.5))
-    assert not sched2._engine_eligible()
+
+
+def test_cluster_knee_delegates_to_engine():
+    """KNEE's per-epoch alpha refit (median of the active remaining sizes)
+    now runs inside the scan (``engine.knee_rule``): the delegated
+    trajectory must match the per-event Python oracle — chips exactly at
+    every decision epoch in the quantized regime, flows to float tolerance
+    in both regimes."""
+    rng = np.random.default_rng(5)
+    sizes = rng.pareto(1.5, 13) + 1.0
+    for quantize in (True, False):
+        def mk(quantize=quantize):
+            s = ClusterScheduler(48, policy="knee", quantize=quantize)
+            for i, sz in enumerate(sizes):
+                s.add_job(Job(f"j{i}", size=float(sz), p=0.45))
+            return s
+
+        a, b = mk(), mk()
+        assert a._engine_eligible(), "knee must delegate now"
+        ra = a.run_fluid_to_completion(use_engine=True)
+        rb = b.run_fluid_to_completion(use_engine=False)
+        ta = np.array(sorted(ra["completion_times"].values()))
+        tb = np.array(sorted(rb["completion_times"].values()))
+        np.testing.assert_allclose(ta, tb, rtol=1e-10)
+        if quantize:
+            ea = [e["chips"] for e in a.events if e["event"] == "allocate"]
+            eb = [e["chips"] for e in b.events if e["event"] == "allocate"]
+            assert ea == eb  # integer chips exact, event-for-event

@@ -411,8 +411,10 @@ def test_simulate_multiclass_with_estimated_class_exponents():
     assert float(truth.mean_flowtime) <= float(est.mean_flowtime) * 1.05
 
 
-def test_knee_still_falls_back_to_python_loop():
-    """The one remaining Python-only feature: per-epoch KNEE alpha."""
+def test_knee_estimator_still_falls_back_to_python_loop():
+    """KNEE alone delegates now (``engine.knee_rule``); the one remaining
+    Python-only combination is KNEE *under the estimator* — its alpha
+    refit is not threaded through ``estimating_rule``'s static policy."""
     s = ClusterScheduler(16, policy="knee", use_estimator=True)
     s.add_job(Job("a", size=4.0, p=0.5))
     assert not s._engine_eligible()

@@ -352,6 +352,86 @@ def test_multiclass_sweep_single_call_shapes():
         assert np.all(np.isfinite(np.asarray(out[name]["mean_slowdown"])))
 
 
+# ----------------------------------------------- per-class time-varying drift
+def test_drift_multiclass_two_piece_closed_form_exact():
+    """Single-job draws from the registered ``drift_multiclass`` sampler:
+    the (random) job runs alone, so its completion has a two-piece closed
+    form under its class's ``p -> p1[k]`` regime change — the engine must
+    hit it exactly, whichever class was drawn and wherever the drift lands
+    relative to the arrival."""
+    classes = (ClassSpec(p=0.8, mix=0.5), ClassSpec(p=0.6, mix=0.5))
+    sampler = make_scenario("drift_multiclass", classes=classes,
+                            p1=(0.3, 0.2), drift_frac=0.5)
+    n_servers = 64.0
+    for seed in range(8):
+        scn = sampler(jax.random.PRNGKey(seed), 1, 1.0)
+        res = simulate_multiclass(scn, classes=classes, policy="hesrpt_pc",
+                                  n_servers=n_servers)
+        a1 = float(scn.arrival_times[0])
+        x = float(scn.x0[0])
+        p0v = float(scn.p_drift.values[0][0])
+        p1v = float(scn.p_drift.values[1][0])
+        t_d = float(scn.p_drift.times[0])
+        r0, r1 = n_servers ** p0v, n_servers ** p1v
+        if t_d <= a1:  # drift before the job even arrives
+            expect = a1 + x / r1
+        elif a1 + x / r0 <= t_d:  # finishes inside the first regime
+            expect = a1 + x / r0
+        else:  # the genuine two-piece case
+            expect = t_d + (x - (t_d - a1) * r0) / r1
+        np.testing.assert_allclose(float(res.completion_times[0]), expect,
+                                   rtol=1e-12)
+
+
+def test_drift_multiclass_sampler_structure():
+    """The sampler fills the per-job-rows PDrift form: ``values[0]`` is
+    the drawn pre-drift ``p_job`` (the stale scheduler's belief) and
+    ``values[1]`` each job's class's post-drift exponent; a drift placed
+    after the horizon reproduces the undrifted trajectory bit-for-bit."""
+    classes = (ClassSpec(p=0.7, mix=0.6), ClassSpec(p=0.4, mix=0.4))
+    sampler = make_scenario("drift_multiclass", classes=classes,
+                            p1=(0.2, 0.9), drift_frac=0.5)
+    scn = sampler(jax.random.PRNGKey(2), 40, 2.0)
+    assert scn.p_drift is not None
+    assert scn.p_drift.values.shape == (2, 40)
+    np.testing.assert_array_equal(np.asarray(scn.p_drift.values[0]),
+                                  np.asarray(scn.p_job))
+    p1 = np.asarray([0.2, 0.9])[np.asarray(scn.class_ids)]
+    np.testing.assert_array_equal(np.asarray(scn.p_drift.values[1]), p1)
+    # drift far beyond the horizon: identical to dropping it entirely
+    late = sampler(jax.random.PRNGKey(2), 40, 2.0)
+    late = late._replace(
+        p_drift=late.p_drift._replace(times=jnp.asarray([1e9]))
+    )
+    res_late = simulate_multiclass(late, classes=classes, policy="waterfill",
+                                   n_servers=64.0)
+    res_none = simulate_multiclass(scn._replace(p_drift=None),
+                                   classes=classes, policy="waterfill",
+                                   n_servers=64.0)
+    np.testing.assert_array_equal(np.asarray(res_late.completion_times),
+                                  np.asarray(res_none.completion_times))
+
+
+def test_drift_multiclass_p1_length_validation():
+    with pytest.raises(ValueError, match="post-drift exponent per class"):
+        make_scenario("drift_multiclass", classes=TWO_CLASSES,
+                      p1=(0.3,))(jax.random.PRNGKey(0), 8, 1.0)
+
+
+def test_drift_multiclass_through_sweep_engine():
+    """The new scenario composes with the sweep subsystem (per-class
+    metrics finite at every load; physics follow each class's schedule)."""
+    from repro.core import multiclass_sweep
+
+    out = multiclass_sweep(
+        ("hesrpt_pc",), (0.5, 2.0), classes=TWO_CLASSES, n_jobs=30,
+        n_seeds=3, n_servers=32.0, scenario="drift_multiclass",
+        scenario_kw={"p1": (0.15, 0.25)},
+    )
+    assert out["hesrpt_pc"]["mean_flowtime"].shape == (2, 3)
+    assert np.all(np.isfinite(out["hesrpt_pc"]["class_slowdown"]))
+
+
 # The hypothesis property twins (wider random ranges) live in
 # tests/test_multiclass_properties.py, which — like tests/test_quantize.py
 # — is skipped wholesale when hypothesis is absent; this module keeps the

@@ -1,0 +1,58 @@
+"""Hypothesis property tests for the sweep subsystem.
+
+Wider-random twins of the seeded chunk checks in tests/test_sweeps.py:
+chunk-boundary invariance (any chunk size, any seed count, divisor or not,
+reproduces the unchunked vmap bit-for-bit) and the jobs-in-flight budget
+arithmetic.  Skipped wholesale when hypothesis is absent (same convention
+as tests/test_quantize.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.sweeps import Sweep, resolve_chunk, run_sweep
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')"
+)
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+# One fixed small grid per seed count: the property varies HOW it is
+# chunked, not WHAT is simulated, so the reference runs once per n_seeds.
+_REFS: dict[int, np.ndarray] = {}
+
+
+def _ref(n_seeds: int):
+    spec = Sweep.create(("equi",), (1.0, 4.0), n_jobs=12, n_seeds=n_seeds,
+                        p=0.5, n_servers=32.0, seed=0)
+    if n_seeds not in _REFS:
+        _REFS[n_seeds] = run_sweep(spec, log=False).stats["equi"][
+            "mean_flowtime"]
+    return spec, _REFS[n_seeds]
+
+
+@settings(max_examples=12, deadline=None)
+@given(n_seeds=st.integers(2, 7), chunk=st.integers(1, 9))
+def test_chunk_boundary_invariance(n_seeds, chunk):
+    """Any (n_seeds, chunk) pair — divisor, non-divisor, chunk > n_seeds —
+    is bit-for-bit the unchunked vmap."""
+    spec, ref = _ref(n_seeds)
+    got = run_sweep(spec, chunk_seeds=chunk, log=False)
+    np.testing.assert_array_equal(got.stats["equi"]["mean_flowtime"], ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(budget=st.integers(1, 5000), n_jobs=st.integers(1, 100),
+       n_rates=st.integers(1, 5))
+def test_jobs_in_flight_budget_arithmetic(budget, n_jobs, n_rates):
+    """The resolved chunk never exceeds the budget (except the one-seed
+    floor) and never wastes it by more than one seed's worth."""
+    spec = Sweep.create(("equi",), tuple(float(r + 1) for r in range(n_rates)),
+                        n_jobs=n_jobs, n_seeds=8)
+    chunk = resolve_chunk(spec, None, budget)
+    per_seed = spec.jobs_per_seed()
+    assert chunk >= 1
+    if chunk > 1:
+        assert chunk * per_seed <= budget
+    assert (chunk + 1) * per_seed > budget
