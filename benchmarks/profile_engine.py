@@ -1,0 +1,305 @@
+"""Profile the allocation scan body: where does a quantized heSRPT event go?
+
+The engine's per-event hot path is sort-dominated.  This harness attributes
+per-event cost to its pieces — the policy's size sort/rank, the
+largest-remainder quantizer, and the assembled allocate — across the
+optimization trajectory this repo shipped:
+
+  ========  =========  =================================================
+  variant   sorts/ev   what it is
+  ========  =========  =================================================
+  seed          4      policy sort + the first quantizer port (separate
+                       trim and leftover argsorts), reconstructed here so
+                       the win stays attributable after the code moved on
+  unfused       3      policy sort + collapsed quantizer — what
+                       ``engine.quantized_rule`` ships today
+  fused         2      ``kernels/alloc.py`` ref pass sharing one sorted
+                       order (rank-space oversubscription cut)
+  pallas        0      the Pallas kernel: O(M^2) comparison counting, no
+                       sort primitive at all (interpret mode on CPU, so
+                       its wall time here is NOT representative — the
+                       sort count and the TPU roofline are the story)
+  ========  =========  =================================================
+
+Wall times come from ``jax.block_until_ready`` over jitted calls; sort
+counts are *measured from the compiled HLO* via
+``launch.hlo_analysis.op_histogram`` (trip-count-aware, so the full
+``engine.run`` scan reports sorts *per event*, not per program).  The
+headline acceptance number is the fused-vs-seed per-event allocate
+speedup on CPU (target >= 1.5x, driven by the sort-count reduction).
+
+``python -m benchmarks.profile_engine [--smoke] [--json]``; also runs as a
+section of ``benchmarks/run.py`` (including ``--smoke``), logging a
+``kind="profile_engine"`` record into the ``BENCH_sweeps.json`` trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+# ------------------------------------------------- the seed's 3-sort quantizer
+def _seed_quantize(theta, n_chips: int, *, min_chips: int = 1):
+    """The first ``quantize_allocation_jax`` port: separate trim/leftover
+    argsorts (3 sorts per call).  Kept verbatim here — not in core — purely
+    so the profiler can measure the collapse against its true baseline.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ranking import inv_rank
+
+    theta = jnp.asarray(theta)
+    M = theta.shape[0]
+    if n_chips <= 0 or min_chips <= 0 or M == 0:
+        return jnp.zeros(M, jnp.int32)
+    cap = n_chips // min_chips
+
+    active0 = theta > 0
+    n_active = jnp.sum(active0, dtype=jnp.int32)
+    desc = inv_rank(jnp.argsort(jnp.where(active0, -theta, jnp.inf)))
+    servable = active0 & (desc < cap)
+    over = n_active * min_chips > n_chips
+    sub = jnp.where(servable, theta, 0.0)
+    tot = jnp.sum(sub)
+    theta_eff = jnp.where(over, jnp.where(tot > 0, sub / tot, 0.0), theta)
+    active = theta_eff > 0
+
+    raw = theta_eff * n_chips
+    fl = jnp.floor(raw)
+    frac = raw - fl
+    base = jnp.where(active, jnp.maximum(fl, min_chips), 0.0).astype(jnp.int32)
+
+    K = jnp.maximum(jnp.sum(base) - n_chips, 0)
+    capj = jnp.maximum(base - min_chips, 0) * (base > min_chips)
+
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        ge = jnp.sum(jnp.minimum(capj, mid)) >= K
+        return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
+
+    n_bits = (n_chips + 1).bit_length()
+    lo, _hi = jax.lax.fori_loop(
+        0, n_bits, bisect, (jnp.int32(0), jnp.int32(n_chips))
+    )
+    r_star = lo
+    full = jnp.minimum(capj, jnp.maximum(r_star - 1, 0))
+    extra_needed = K - jnp.sum(full)
+    elig = capj >= jnp.maximum(r_star, 1)
+    # The two argsorts the shipped quantizer collapses into one:
+    erank = inv_rank(jnp.argsort(jnp.where(elig, frac, jnp.inf)))
+    extra = (elig & (erank < extra_needed)).astype(jnp.int32)
+    base = base - full - extra
+
+    remainder = n_chips - jnp.sum(base)
+    frank = inv_rank(jnp.argsort(jnp.where(active, -frac, jnp.inf)))
+    return base + (active & (frank < remainder)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------- measurement
+def _time(f, *args, repeats=5, inner=1):
+    """Per-repeat wall times (us) of a compiled call, warm (post-compile).
+
+    Each repeat times ``inner`` back-to-back calls and reports the per-call
+    average — sub-millisecond calls are otherwise swamped by scheduler
+    jitter on a shared machine.
+    """
+    import jax
+
+    jax.block_until_ready(f(*args))  # compile + warm
+    out = np.zeros(repeats)
+    for r in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            jax.block_until_ready(f(*args))
+        out[r] = (time.perf_counter() - t0) * 1e6 / inner
+    return out
+
+
+def _sort_count(f, *args) -> float:
+    """``sort`` ops in the compiled HLO (while bodies x trip count)."""
+    import jax
+
+    from repro.launch.hlo_analysis import op_histogram
+
+    hlo = jax.jit(f).lower(*args).compile().as_text()
+    return op_histogram(hlo).get("sort", 0.0)
+
+
+def run(m: int = 4096, engine_m: int = 1024, p: float = 0.5,
+        n_chips: int = 1024, min_chips: int = 1, repeats: int = 5,
+        log: bool = True):
+    """Profile components at job count ``m`` and the full scan at
+    ``engine_m``; returns ``(rows, engine_rows, result)`` where ``rows`` is
+    ``[(name, sorts_per_call, us_min, us_per_repeat)]``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+    from repro.core.flowtime import speedup
+    from repro.core.policies import hesrpt
+    from repro.core.sweeps import RUN_LOG, SweepResult
+    from repro.kernels.alloc import hesrpt_alloc_fused, hesrpt_alloc_fused_ref
+
+    t_start = time.perf_counter()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.pareto(1.5, m) + 1.0)  # f64 under run.py's x64 flag
+    pj = jnp.asarray(p, x.dtype)
+    theta0 = hesrpt(x, p)
+
+    rule = engine.quantized_rule(
+        hesrpt, n_chips, min_chips=min_chips, dtype=x.dtype
+    )
+    fused_rule = getattr(rule, "fused_variant")  # noqa: B009
+
+    def alloc_seed(x_act, pv):
+        theta = hesrpt(x_act, pv).astype(x.dtype)
+        chips = _seed_quantize(theta, n_chips, min_chips=min_chips)
+        return chips, speedup(chips.astype(x.dtype), pv)
+
+    def alloc_pallas(x_act, pv):
+        _theta, chips = hesrpt_alloc_fused(
+            x_act, pv, n_chips, min_chips=min_chips, impl="interpret"
+        )
+        return chips, speedup(chips.astype(x.dtype), pv)
+
+    components = [
+        ("policy_theta", lambda xv, pv: hesrpt(xv, pv), (x, pj)),
+        ("quantize_seed",
+         lambda th: _seed_quantize(th, n_chips, min_chips=min_chips),
+         (theta0,)),
+        ("quantize_collapsed",
+         lambda th: engine.quantize_allocation_jax(
+             th, n_chips, min_chips=min_chips),
+         (theta0,)),
+        ("alloc_seed", alloc_seed, (x, pj)),
+        ("alloc_unfused", rule, (x, pj)),
+        ("alloc_fused_ref", fused_rule, (x, pj)),
+        ("alloc_pallas_interp", alloc_pallas, (x, pj)),
+    ]
+    # Ratios use the min over repeats: on a shared machine the mean is
+    # contaminated by scheduler interference, while the min approaches the
+    # true (uninterfered) cost of the compiled call.
+    rows = []
+    for name, f, args in components:
+        jf = jax.jit(f)
+        us = _time(jf, *args, repeats=repeats, inner=8)
+        sorts = _sort_count(f, *args)
+        rows.append((name, sorts, float(us.min()), us))
+
+    # Full event scan, unfused vs fused: per-event wall time and — via the
+    # trip-count-aware histogram — per-event sort count from the compiled
+    # while loop (minus the one-time arrival-order sort outside the scan).
+    xe = jnp.asarray(rng.pareto(1.5, engine_m) + 1.0)
+    arr = jnp.zeros(engine_m, xe.dtype)
+    n_events = engine_m  # pre_arrived horizon
+
+    engine_rows = []
+    for name, fused in (("engine_unfused", False), ("engine_fused", True)):
+        def f_run(x0, at, *, _fused=fused):
+            return engine.run(
+                x0, at, p, rule, pre_arrived=True, fused=_fused
+            ).completion_times
+
+        us = _time(jax.jit(f_run), xe, arr, repeats=repeats)
+        sorts_ev = (_sort_count(f_run, xe, arr) - 1.0) / n_events
+        engine_rows.append(
+            (name, sorts_ev, float(us.min()) / n_events, us / n_events)
+        )
+
+    by_name = {name: (sorts, best) for name, sorts, best, _ in rows}
+    speedup_vs_seed = by_name["alloc_seed"][1] / by_name["alloc_fused_ref"][1]
+    speedup_vs_unfused = (
+        by_name["alloc_unfused"][1] / by_name["alloc_fused_ref"][1]
+    )
+    engine_speedup = engine_rows[0][2] / engine_rows[1][2]
+
+    stats: dict[str, np.ndarray] = {}
+    for name, sorts, _mean, us in rows:
+        stats[f"{name}_us"] = us.reshape(1, -1)
+        stats[f"{name}_sorts"] = np.array([[sorts]])
+    for name, sorts_ev, _mean, us_ev in engine_rows:
+        stats[f"{name}_us_per_event"] = us_ev.reshape(1, -1)
+        stats[f"{name}_sorts_per_event"] = np.array([[sorts_ev]])
+    stats["alloc_speedup_vs_seed"] = np.array([[speedup_vs_seed]])
+    stats["alloc_speedup_vs_unfused"] = np.array([[speedup_vs_unfused]])
+    stats["engine_speedup"] = np.array([[engine_speedup]])
+
+    result = SweepResult(
+        spec={
+            "kind": "profile_engine",
+            "m": m,
+            "engine_m": engine_m,
+            "p": p,
+            "n_chips": n_chips,
+            "min_chips": min_chips,
+            "repeats": repeats,
+            "policy": "hesrpt",
+        },
+        stats={"hesrpt": stats},
+        wall_s=time.perf_counter() - t_start,
+        compile_s=0.0,
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        chunk_seeds=None,
+        sharded=False,
+    )
+    if log:
+        RUN_LOG.append(result.record())
+    return rows, engine_rows, result
+
+
+def main(smoke: bool = False):
+    if smoke:
+        rows, engine_rows, res = run(
+            m=512, engine_m=256, repeats=5, n_chips=256
+        )
+    else:
+        rows, engine_rows, res = run()
+    spec = res.spec
+    lines = [
+        f"components at M={spec['m']}, n_chips={spec['n_chips']}, "
+        f"p={spec['p']} ({res.backend}, min of {spec['repeats']} repeats):",
+        f"{'component':>22s} {'sorts/call':>10s} {'us/call':>12s}",
+    ]
+    for name, sorts, best, _ in rows:
+        lines.append(f"{name:>22s} {sorts:10.0f} {best:12.1f}")
+    lines.append("")
+    lines.append(f"full event scan at M={spec['engine_m']} (pre-arrived, "
+                 f"{spec['engine_m']} events):")
+    lines.append(f"{'variant':>22s} {'sorts/ev':>10s} {'us/event':>12s}")
+    for name, sorts_ev, best_ev, _ in engine_rows:
+        lines.append(f"{name:>22s} {sorts_ev:10.1f} {best_ev:12.1f}")
+    st = res.stats["hesrpt"]
+    vs_seed = float(st["alloc_speedup_vs_seed"][0, 0])
+    vs_unfused = float(st["alloc_speedup_vs_unfused"][0, 0])
+    eng = float(st["engine_speedup"][0, 0])
+    lines.append("")
+    lines.append(
+        f"allocate speedup (fused ref vs seed 4-sort): {vs_seed:.2f}x "
+        f"[target >= 1.5x: {'PASS' if vs_seed >= 1.5 else 'MISS'}]"
+    )
+    lines.append(
+        f"allocate speedup (fused ref vs shipped unfused): "
+        f"{vs_unfused:.2f}x"
+    )
+    lines.append(f"engine.run speedup (fused vs unfused): {eng:.2f}x")
+    return "\n".join(lines), res
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    text, res = main(smoke="--smoke" in sys.argv)
+    if "--json" in sys.argv:
+        print(json.dumps(res.record(), indent=1))
+    else:
+        print(text)

@@ -90,6 +90,13 @@ def main() -> None:
     text, _ = estimation.main(quick=quick, smoke=smoke)
     print(text)
 
+    _section("Beyond paper — scan-body profile: sort counts + fused allocate "
+             + ("(smoke)" if smoke else "(M=4096 components, M=1024 scan)"))
+    from benchmarks import profile_engine
+
+    text, _ = profile_engine.main(smoke=smoke)
+    print(text)
+
     if not smoke:
         _section("Beyond paper — scheduler decision cost at cluster scale")
         from benchmarks import sched_scale

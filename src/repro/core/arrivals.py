@@ -147,6 +147,7 @@ def simulate_online_quantized(
     rel_tol: float = 1e-9,
     horizon: int | None = None,
     record: bool = False,
+    fused: bool = False,
 ):
     """Online simulation with whole-chip allocations (integer regime).
 
@@ -157,6 +158,8 @@ def simulate_online_quantized(
     (see ``benchmarks/quantized.py``).  With ``record=True`` returns
     ``(OnlineSimResult, EngineResult)`` where the engine trace carries the
     per-event chips/time/sizes trajectory (arrival-sorted job order).
+    ``fused=True`` takes the ``kernels/alloc.py`` fused allocate (heSRPT
+    only; chip-exact vs the unfused rule).
     """
     x0 = jnp.asarray(x0)
     dtype = jnp.result_type(x0.dtype, jnp.float32)
@@ -170,6 +173,7 @@ def simulate_online_quantized(
         horizon=horizon,
         rel_tol=rel_tol,
         record=record,
+        fused=fused,
     )
     out = _finalize(x0, arrival_times, res.completion_times, p, n_chips)
     return (out, res) if record else out
@@ -185,6 +189,7 @@ def simulate_scenario(
     min_chips: int = 1,
     rel_tol: float = 1e-9,
     horizon: int | None = None,
+    fused: bool = False,
 ) -> OnlineSimResult:
     """Run one drawn :class:`Scenario` through the engine.
 
@@ -204,6 +209,10 @@ def simulate_scenario(
     (the stale arm).  The arm that has to *earn* its estimate —
     allocating with an online p-hat fit from observed throughput — is
     ``estimation.simulate_scenario_estimated``.
+
+    ``fused=True`` runs the engine on the ``kernels/alloc.py`` fused
+    allocate (heSRPT only — other policies raise): fewer sorts per event
+    on CPU, the Pallas kernel on TPU, chip-exact either way.
     """
     x0 = jnp.asarray(scn.x0)
     dtype = jnp.result_type(x0.dtype, jnp.float32)
@@ -242,7 +251,7 @@ def simulate_scenario(
         n_alone = n_servers
     res = engine.run(
         x0, arrival_times, p_phys, rule, horizon=horizon, rel_tol=rel_tol,
-        p_drift=scn.p_drift,
+        p_drift=scn.p_drift, fused=fused,
     )
     return _finalize(x0, arrival_times, res.completion_times, p_phys, n_alone)
 

@@ -23,6 +23,8 @@ from collections.abc import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.ranking import inv_rank, ranks_from_order, size_order_desc
+
 Policy = Callable[..., jax.Array]  # (x, p, ...) -> theta
 
 
@@ -37,15 +39,9 @@ def size_ranks_desc(x: jax.Array) -> jax.Array:
     ``m`` (the number of active jobs).  Inactive jobs get rank 0.  Ties are
     broken by index (stable argsort), which is WLOG optimal by symmetry.
     """
-    active = _active(x)
-    # Inactive jobs sort last (key = -inf after negation -> +inf).
-    key = jnp.where(active, -x, jnp.inf)
-    order = jnp.argsort(key)  # indices: active desc by size, then inactive
-    m_total = x.shape[0]
-    ranks = jnp.zeros(m_total, dtype=jnp.int32).at[order].set(
-        jnp.arange(1, m_total + 1, dtype=jnp.int32)
-    )
-    return jnp.where(active, ranks, 0)
+    # Inactive jobs sort last (key = -inf after negation -> +inf); the
+    # order -> rank conversion is the shared inverse-permutation scatter.
+    return ranks_from_order(size_order_desc(x), _active(x))
 
 
 # Rank-space policy forms.  Theorem 6 proves the optimal allocation is
@@ -275,13 +271,10 @@ def weighted_hesrpt(x: jax.Array, p: jax.Array, w: jax.Array) -> jax.Array:
     renormalized so the allocation always sums to 1.
     """
     active = _active(x)
-    key = jnp.where(active, -x, jnp.inf)
-    order = jnp.argsort(key)  # active desc by size, then inactive
+    order = size_order_desc(x)  # active desc by size, then inactive
     w_act = jnp.where(active, w, 0.0)
     csum_sorted = jnp.cumsum(w_act[order])
-    M = x.shape[0]
-    inv = jnp.zeros(M, order.dtype).at[order].set(jnp.arange(M, dtype=order.dtype))
-    W_hi = csum_sorted[inv]  # cumulative weight of jobs at least this large
+    W_hi = csum_sorted[inv_rank(order)]  # cum. weight of jobs at least this large
     W_lo = W_hi - w_act
     W_tot = jnp.maximum(csum_sorted[-1], jnp.finfo(x.dtype).tiny)
     c = 1.0 / (1.0 - p)

@@ -1,0 +1,51 @@
+"""Shared inverse-permutation / ranking helpers.
+
+Three modules used to carry their own copy of the same two-line scatter
+(``engine._inv_rank``, ``policies.size_ranks_desc``'s rank scatter and
+``policies.weighted_hesrpt``'s inline inverse permutation).  They live here
+now — a leaf module importable by both ``core.policies`` and
+``core.engine`` (policies cannot import engine: engine imports policies)
+and by ``kernels.alloc``, whose fused allocation path must produce
+bit-identical ranks to the unfused one.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def inv_rank(order: jax.Array) -> jax.Array:
+    """Position of each element in its own argsort (the inverse permutation).
+
+    ``inv_rank(jnp.argsort(key))[i]`` is the 0-based position job ``i``
+    takes when sorted by ``key`` — the scatter form is O(M) where a second
+    argsort would pay another O(M log M) sort.
+    """
+    M = order.shape[0]
+    return (
+        jnp.zeros(M, jnp.int32).at[order].set(jnp.arange(M, dtype=jnp.int32))
+    )
+
+
+def size_order_desc(x: jax.Array) -> jax.Array:
+    """Argsort of the active jobs by remaining size, descending.
+
+    Active (``x > 0``) jobs come first, largest first; inactive jobs sort
+    last.  Ties break by index (stable argsort).  This is THE sorted order
+    of the per-event hot path: ``ranks_from_order`` turns it into the
+    1-based descending-size ranks every rank-space policy consumes, and the
+    fused allocation kernel (``kernels.alloc``) reuses it for the
+    oversubscription cut instead of re-sorting.
+    """
+    return jnp.argsort(jnp.where(x > 0, -x, jnp.inf))
+
+
+def ranks_from_order(order: jax.Array, active: jax.Array) -> jax.Array:
+    """1-based ranks from a :func:`size_order_desc` order (0 = inactive).
+
+    Bit-identical to the historical ``size_ranks_desc`` scatter: the
+    largest active job gets rank 1, the smallest rank ``m``; every rank is
+    ``inv_rank + 1`` masked to the active set.
+    """
+    return jnp.where(active, inv_rank(order) + 1, 0)

@@ -104,6 +104,7 @@ class Sweep(NamedTuple):
     metrics: tuple[str, ...] = ("mean_flowtime",)
     arm: str | None = None  # estimation regime: oracle | stale | estimator
     arm_kw: tuple = ()  # e.g. (("discount", 0.9), ("prior_weight", 1.0))
+    fused: bool = False  # kernels/alloc.py fused allocate (quantized heSRPT)
 
     @classmethod
     def create(
@@ -126,6 +127,7 @@ class Sweep(NamedTuple):
         metrics=None,
         arm: str | None = None,
         arm_kw: dict | tuple | None = None,
+        fused: bool = False,
     ) -> "Sweep":
         from repro.core.arrivals import OnlineSimResult
         from repro.core.multiclass import as_specs
@@ -164,6 +166,20 @@ class Sweep(NamedTuple):
             )
         if snap_slices and classes is None:
             raise ValueError("snap_slices is only wired for multi-class sweeps")
+        if fused:
+            # The fused allocate exists for the quantized heSRPT hot path;
+            # continuous heSRPT already dispatches to the (faster) carried-
+            # rank scan, and no other policy has a fused variant.
+            if classes is not None or arm is not None:
+                raise ValueError("fused sweeps are single-class, arm-free")
+            if n_chips is None:
+                raise ValueError(
+                    "fused=True needs n_chips (the quantized regime; "
+                    "continuous heSRPT already runs the ranked fast path)"
+                )
+            bad = tuple(p for p in policies if p != "hesrpt")
+            if bad:
+                raise ValueError(f"fused sweeps support only heSRPT, got {bad}")
         return cls(
             policies=tuple(policies),
             rates=tuple(float(r) for r in rates),
@@ -182,6 +198,7 @@ class Sweep(NamedTuple):
             metrics=metrics,
             arm=arm,
             arm_kw=_hashable(arm_kw or {}),
+            fused=bool(fused),
         )
 
     def jobs_per_seed(self) -> int:
@@ -316,7 +333,7 @@ def _cell_fn(spec: Sweep, name: str):
         else:
             res = simulate_scenario(
                 scn, spec.p, spec.n_servers, pol, n_chips=spec.n_chips,
-                min_chips=spec.min_chips,
+                min_chips=spec.min_chips, fused=spec.fused,
             )
         return metrics_of(res, scn)
 
@@ -329,20 +346,25 @@ def _metric_ndim(spec: Sweep, metric: str) -> int:
     return 1 if metric in CLASS_METRICS else 0
 
 
-def _build_fn(spec: Sweep, name: str, chunk: int | None, shard: bool):
+def _build_fn(
+    spec: Sweep, name: str, chunk: int | None, shard: bool,
+    shard_axis: str = "seeds",
+):
     """The pure ``(keys, rates) -> tuple_of_metric_arrays`` a policy runs.
 
-    ``keys`` may be padded to the shard grid; each metric comes back
-    ``[n_rates, len(keys)(, K)]``.
+    ``keys`` (or ``rates``, under ``shard_axis="rates"``) may be padded to
+    the shard grid; each metric comes back ``[n_rates, len(keys)(, K)]``.
     """
     import jax
     import jax.numpy as jnp
 
     one = _cell_fn(spec, name)
     inner = jax.vmap(jax.vmap(one, in_axes=(0, None)), in_axes=(None, 0))
-    R = len(spec.rates)
 
     def over_seeds(keys, rates):
+        # Rate-axis shards see a slice of the rate grid, so the rate count
+        # comes from the argument, not the spec.
+        R = rates.shape[0]
         s_local = keys.shape[0]
         if chunk is None or chunk >= s_local:
             return inner(keys, rates)
@@ -368,17 +390,27 @@ def _build_fn(spec: Sweep, name: str, chunk: int | None, shard: bool):
     from repro.models.common import shard_map
 
     devices = np.asarray(jax.devices())
-    mesh = Mesh(devices, ("seeds",))
-    out_specs = tuple(
-        P(None, "seeds", *(None,) * _metric_ndim(spec, m))
-        for m in spec.metrics
-    )
+    mesh = Mesh(devices, (shard_axis,))
+    if shard_axis == "rates":
+        # Wide load grids: split the rate axis, replicate seeds.  Metric
+        # arrays are [n_rates, n_seeds(, K)], so the sharded axis leads.
+        in_specs = (P(), P("rates"))
+        out_specs = tuple(
+            P("rates", None, *(None,) * _metric_ndim(spec, m))
+            for m in spec.metrics
+        )
+    else:
+        in_specs = (P("seeds"), P())
+        out_specs = tuple(
+            P(None, "seeds", *(None,) * _metric_ndim(spec, m))
+            for m in spec.metrics
+        )
 
     def sharded(keys, rates):
         return shard_map(
             over_seeds,
             mesh=mesh,
-            in_specs=(P("seeds"), P()),
+            in_specs=in_specs,
             out_specs=out_specs,
         )(keys, rates)
 
@@ -396,12 +428,13 @@ _EXECUTORS_MAX = 64
 
 
 def _executor(spec: Sweep, name: str, keys, rates, chunk: int | None,
-              shard: bool):
+              shard: bool, shard_axis: str = "seeds"):
     """Return ``(compiled, compile_seconds)`` for one policy column."""
     import jax
 
     cache_key = (
-        spec._replace(policies=()), name, int(keys.shape[0]), chunk, shard,
+        spec._replace(policies=()), name, int(keys.shape[0]),
+        int(rates.shape[0]), chunk, shard, shard_axis,
         str(keys.dtype), str(rates.dtype),
     )
     hit = _EXECUTORS.get(cache_key)
@@ -410,7 +443,7 @@ def _executor(spec: Sweep, name: str, keys, rates, chunk: int | None,
         # sweep below (dict preserves insertion order).
         _EXECUTORS[cache_key] = _EXECUTORS.pop(cache_key)
         return hit, 0.0
-    f = _build_fn(spec, name, chunk, shard)
+    f = _build_fn(spec, name, chunk, shard, shard_axis)
     t0 = time.perf_counter()
     compiled = jax.jit(f).lower(keys, rates).compile()
     compile_s = time.perf_counter() - t0
@@ -562,6 +595,7 @@ class SweepResult(NamedTuple):
             snap_slices=s["snap_slices"], classes=s["classes"],
             metrics=s["metrics"], arm=s["arm"],
             arm_kw=dict((k, _hashable(v)) for k, v in s["arm_kw"]),
+            fused=s.get("fused", False),
         )
         stats = {
             name: {m: np.asarray(v, dtype=np.float64) for m, v in by_m.items()}
@@ -601,6 +635,7 @@ def run_sweep(
     chunk_seeds: int | None = None,
     max_jobs_in_flight: int | None = None,
     shard: bool = False,
+    shard_axis: str = "seeds",
     log: bool = True,
 ) -> SweepResult:
     """Execute a :class:`Sweep`: one compiled device call per policy.
@@ -610,37 +645,52 @@ def run_sweep(
 
     ``chunk_seeds`` / ``max_jobs_in_flight`` bound memory by running the
     seed axis in ``lax.map`` chunks (identical results); ``shard=True``
-    additionally splits the seed axis across ``jax.devices()`` with
+    additionally splits one grid axis across ``jax.devices()`` with
     ``shard_map`` (identical results; pass it on multi-device hosts).
-    ``log=False`` keeps the run out of :data:`RUN_LOG` (used by tests).
+    ``shard_axis`` picks that axis: ``"seeds"`` (default) or ``"rates"``
+    for very wide load grids with few seeds (the accelerator-lane shape,
+    ``benchmarks/backend_lane.py``).  ``log=False`` keeps the run out of
+    :data:`RUN_LOG` (used by tests).
     """
     import jax
     import jax.numpy as jnp
 
+    if shard_axis not in ("seeds", "rates"):
+        raise ValueError(f"shard_axis must be 'seeds' or 'rates', not {shard_axis!r}")
     chunk = resolve_chunk(spec, chunk_seeds, max_jobs_in_flight)
     keys = jax.random.split(jax.random.PRNGKey(spec.seed), spec.n_seeds)
     rates = jnp.asarray(spec.rates, dtype=jnp.result_type(float))
 
     n_dev = jax.device_count() if shard else 1
     S = spec.n_seeds
-    s_pad = -(-S // n_dev) * n_dev  # shard grid; chunk pads inside the shard
-    if s_pad > S:
-        keys = jnp.concatenate([keys, keys[:1].repeat(s_pad - S, axis=0)])
-    if chunk is not None and chunk >= s_pad // n_dev:
-        chunk = None  # one chunk == the plain vmap; share its executor
+    R = len(spec.rates)
+    if shard and shard_axis == "rates":
+        # Pad the rate grid to the device count; padded rows are sliced off
+        # below.  Seeds stay whole per device.
+        r_pad = -(-R // n_dev) * n_dev
+        if r_pad > R:
+            rates = jnp.concatenate([rates, rates[:1].repeat(r_pad - R)])
+        if chunk is not None and chunk >= S:
+            chunk = None
+    else:
+        s_pad = -(-S // n_dev) * n_dev  # shard grid; chunk pads inside it
+        if s_pad > S:
+            keys = jnp.concatenate([keys, keys[:1].repeat(s_pad - S, axis=0)])
+        if chunk is not None and chunk >= s_pad // n_dev:
+            chunk = None  # one chunk == the plain vmap; share its executor
 
     stats: dict[str, dict[str, np.ndarray]] = {}
     compile_s = 0.0
     wall_s = 0.0
     for name in spec.policies:
-        f, c_s = _executor(spec, name, keys, rates, chunk, shard)
+        f, c_s = _executor(spec, name, keys, rates, chunk, shard, shard_axis)
         compile_s += c_s
         t0 = time.perf_counter()
         out = f(keys, rates)
         out = tuple(np.asarray(a) for a in out)  # blocks until ready
         wall_s += time.perf_counter() - t0
         stats[name] = {
-            m: a[:, :S] for m, a in zip(spec.metrics, out, strict=True)
+            m: a[:R, :S] for m, a in zip(spec.metrics, out, strict=True)
         }
     result = SweepResult(
         spec=spec,

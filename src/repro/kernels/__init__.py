@@ -13,9 +13,17 @@ import jax.experimental.pallas.tpu as pltpu
 # import it from this (then partially-initialized) package.
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-from repro.kernels import ops, ref  # noqa: E402
+from repro.kernels import alloc, ops, ref  # noqa: E402
 from repro.kernels.flash_attention import flash_attention  # noqa: E402
 from repro.kernels.rglru_scan import rglru_scan  # noqa: E402
 from repro.kernels.ssd_scan import ssd_scan  # noqa: E402
 
-__all__ = ["CompilerParams", "flash_attention", "ops", "ref", "rglru_scan", "ssd_scan"]
+__all__ = [
+    "CompilerParams",
+    "alloc",
+    "flash_attention",
+    "ops",
+    "ref",
+    "rglru_scan",
+    "ssd_scan",
+]

@@ -346,3 +346,55 @@ def analyze_hlo(hlo: str) -> dict:
         "collective_bytes": dict(t.collective_bytes),
         "collective_counts": dict(t.collective_counts),
     }
+
+
+def op_histogram(hlo: str) -> dict[str, float]:
+    """Trip-count-weighted opcode histogram of the ENTRY call graph.
+
+    Counts every op reachable from ENTRY, multiplying while bodies/conds by
+    their trip count (the same walk as :func:`analyze_hlo`) — which is what
+    makes "how many ``sort``s does one event step pay?" answerable from a
+    compiled scan: a per-event sort inside a 2M-trip loop shows up 2M
+    times, not once.  Call-like ops (``fusion``, ``call``, ``reduce``,
+    ``conditional``) count themselves AND their subcomputations' ops;
+    ``conditional`` counts every branch (an upper bound — branches are
+    traced, not taken).
+    """
+    comps = parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: dict[str, dict[str, float]] = {}
+
+    def walk(comp: Computation) -> dict[str, float]:
+        if comp.name in memo:
+            return memo[comp.name]
+        memo[comp.name] = {}  # cycle guard
+        h: dict[str, float] = {}
+
+        def bump(d: dict[str, float], mult: float = 1.0) -> None:
+            for k, v in d.items():
+                h[k] = h.get(k, 0.0) + v * mult
+
+        for op in comp.ops:
+            called = dict(_called_comps(op.rest))
+            if op.opcode == "while":
+                body = comps.get(called.get("body", ""))
+                cond = comps.get(called.get("condition", ""))
+                trips = _trip_count(cond) if cond else 1
+                h["while"] = h.get("while", 0.0) + 1.0
+                if body:
+                    bump(walk(body), trips)
+                if cond:
+                    bump(walk(cond), trips)
+                continue
+            h[op.opcode] = h.get(op.opcode, 0.0) + 1.0
+            for _, sub_name in _called_comps(op.rest):
+                sub = comps.get(sub_name)
+                if sub is not None:
+                    bump(walk(sub))
+
+        memo[comp.name] = h
+        return h
+
+    return walk(entry)

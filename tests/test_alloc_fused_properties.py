@@ -1,0 +1,63 @@
+"""Hypothesis twins of the fused-kernel invariants (tests/test_alloc_fused.py
+carries the seeded-fuzz fallback that runs without hypothesis).
+
+All examples share ONE static shape (M=16, n_chips/min_chips from tiny
+sampled sets): interpret-mode Pallas recompiles per static configuration,
+so varying shapes across hypothesis examples would turn a property test
+into a compile benchmark.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.policies import hesrpt
+from repro.kernels.alloc import hesrpt_alloc_fused
+from tests.test_alloc_fused import PS, _invariants
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')"
+)
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+
+@st.composite
+def padded_jobs(draw):
+    """Sizes padded to a FIXED M=16 (see module docstring)."""
+    m = 16
+    k = draw(st.integers(0, m))
+    vals = draw(st.lists(
+        st.floats(0.01, 1e3, allow_nan=False, allow_infinity=False),
+        min_size=k, max_size=k,
+    ))
+    x = np.zeros(m)
+    x[:k] = vals
+    return jnp.asarray(x)
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=padded_jobs(), p=st.sampled_from(PS),
+       n_chips=st.sampled_from((8, 64)), min_chips=st.sampled_from((1, 3)))
+def test_property_fused_kernel_invariants_interpret(x, p, n_chips, min_chips):
+    """Conservation, min-chips floor, and within-1 hold for the Pallas
+    kernel in interpret mode."""
+    _invariants(x, p, n_chips, min_chips, "interpret")
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=padded_jobs(), p=st.sampled_from(PS),
+       n_chips=st.sampled_from((8, 64)), min_chips=st.sampled_from((1, 3)))
+def test_property_fused_matches_unfused_interpret(x, p, n_chips, min_chips):
+    """Exactness twin: fused (interpret) == the unfused policy+quantizer
+    pipeline, theta bit-for-bit and chips exactly."""
+    theta_ref = hesrpt(x, p)
+    chips_ref = engine.quantize_allocation_jax(
+        theta_ref, n_chips, min_chips=min_chips
+    )
+    theta, chips = hesrpt_alloc_fused(
+        x, p, n_chips, min_chips=min_chips, impl="interpret"
+    )
+    np.testing.assert_array_equal(np.asarray(theta), np.asarray(theta_ref))
+    np.testing.assert_array_equal(np.asarray(chips), np.asarray(chips_ref))

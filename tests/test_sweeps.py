@@ -234,6 +234,52 @@ def test_sharded_on_single_device_is_noop_equal():
                                   ref.stats["hesrpt"]["mean_flowtime"])
 
 
+def test_rate_axis_sharded_equals_single_device_forced_multidevice():
+    """shard_axis="rates" (the accelerator-lane shape: wide rate grid, few
+    seeds) == the single-device run under 4 fake CPU devices, including a
+    rate grid that does not divide the device count (5 -> padded to 8)."""
+    body = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys
+        sys.path.insert(0, {os.path.join(REPO, "src")!r})
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        assert jax.device_count() == 4
+        import numpy as np
+        from repro.core.sweeps import Sweep, run_sweep
+
+        for rates, fused in (((0.5, 1.0, 2.0, 4.0, 8.0), False),
+                             ((0.5, 1.0, 2.0, 4.0), True)):
+            spec = Sweep.create(("hesrpt",), rates, n_jobs=20, n_seeds=2,
+                                p=0.5, n_servers=32.0, seed=0, n_chips=32,
+                                fused=fused)
+            ref = run_sweep(spec, log=False)
+            got = run_sweep(spec, shard=True, shard_axis="rates", log=False)
+            assert got.sharded and got.device_count == 4
+            assert np.array_equal(got.stats["hesrpt"]["mean_flowtime"],
+                                  ref.stats["hesrpt"]["mean_flowtime"]), (
+                rates, fused)
+        print("RATE_SHARDED_OK")
+        """
+    )
+    proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                          text=True, timeout=600)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "RATE_SHARDED_OK" in proc.stdout
+
+
+def test_rate_axis_shard_validation_and_single_device_noop():
+    spec = _small_spec(n_seeds=2)
+    with pytest.raises(ValueError, match="shard_axis"):
+        run_sweep(spec, shard_axis="policies", log=False)
+    ref = run_sweep(spec, log=False)
+    got = run_sweep(spec, shard=True, shard_axis="rates", log=False)
+    np.testing.assert_array_equal(got.stats["hesrpt"]["mean_flowtime"],
+                                  ref.stats["hesrpt"]["mean_flowtime"])
+
+
 # ------------------------------------------------------- structured artifacts
 def test_sweep_result_json_round_trip_exact():
     spec = Sweep.create(("hesrpt_pc",), (1.0,), scenario="multiclass_poisson",

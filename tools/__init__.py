@@ -1,0 +1,1 @@
+"""Repo tooling that is neither library (src/) nor benchmark (benchmarks/)."""

@@ -1,0 +1,186 @@
+"""Compare a fresh ``BENCH_sweeps.json`` against the committed baseline.
+
+The benchmark artifact accumulates one record per sweep (spec + per-cell
+mean/std + wall time + backend).  CI regenerates it every run; this tool
+makes that regeneration a *gate* instead of a log: records are matched on
+``(kind, canonical spec hash, backend)`` and a matched pair fails the diff
+when
+
+- its sweep wall time regressed by more than ``--max-time-ratio`` (default
+  1.30, i.e. >30%) — only when the baseline wall is above ``--min-wall``
+  (default 0.5s; sub-second smoke cells are timer noise, not signal); or
+- any per-cell metric *mean* drifted beyond ``--rtol``/``--atol`` for
+  ``kind == "sweep"`` records (sweeps are seeded and deterministic per
+  backend, so drift means the simulator's outputs changed, not the machine).
+
+Spec hashing is canonical: falsy entries are dropped before hashing so a
+baseline written before a spec field existed (e.g. ``fused``) still matches
+a new record carrying the field at its default.  Baseline records with no
+counterpart are reported as lost coverage (warning, not failure — sections
+come and go); new records with no baseline are simply new.
+
+``python -m tools.bench_diff BASELINE NEW [--max-time-ratio 1.3]
+[--min-wall 0.5] [--rtol 1e-6] [--atol 1e-12]`` — exit 1 on failure.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+
+
+def spec_key(rec: dict) -> str:
+    """``(kind, spec-hash, backend)`` identity of a benchmark record.
+
+    The spec dict is canonicalized by dropping falsy values (None/False/0/
+    empty) so field additions with falsy defaults don't orphan old
+    baselines, then hashed over sorted keys.
+    """
+    spec = rec.get("spec", {})
+    canon = {k: v for k, v in sorted(spec.items()) if v}
+    blob = json.dumps(canon, sort_keys=True)
+    h = hashlib.sha256(blob.encode()).hexdigest()[:16]
+    return f"{rec.get('kind', 'bench')}:{h}:{rec.get('backend', '?')}"
+
+
+def _label(rec: dict) -> str:
+    spec = rec.get("spec", {})
+    bits = [rec.get("kind", "bench")]
+    if rec.get("lane"):
+        bits.append(f"lane={rec['lane']}")
+    if "scenario" in spec:
+        bits.append(str(spec.get("scenario")))
+    if spec.get("n_jobs"):
+        bits.append(f"M={spec['n_jobs']}")
+    if spec.get("n_chips"):
+        bits.append(f"chips={spec['n_chips']}")
+    if spec.get("fused"):
+        bits.append("fused")
+    if spec.get("arm"):
+        bits.append(str(spec["arm"]))
+    if spec.get("classes"):
+        bits.append(f"K={len(spec['classes'])}")
+    bits.append(rec.get("backend", "?"))
+    return " ".join(bits)
+
+
+def _index(records: list[dict]) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for rec in records:
+        out[spec_key(rec)] = rec  # same-key reruns: last one wins
+    return out
+
+
+def _metric_drifts(base: dict, new: dict, rtol: float, atol: float):
+    """Mean drifts between two matched ``kind=="sweep"`` records."""
+    drifts = []
+    for policy, by_metric in (base.get("cells") or {}).items():
+        new_by_metric = (new.get("cells") or {}).get(policy)
+        if new_by_metric is None:
+            drifts.append((policy, "<missing policy>", None, None))
+            continue
+        for metric, stats in by_metric.items():
+            new_stats = new_by_metric.get(metric)
+            if new_stats is None:
+                drifts.append((policy, metric, None, None))
+                continue
+            b, n = _flat(stats["mean"]), _flat(new_stats["mean"])
+            if len(b) != len(n):
+                drifts.append((policy, metric, None, None))
+                continue
+            for bv, nv in zip(b, n, strict=True):
+                if abs(nv - bv) > atol + rtol * abs(bv):
+                    drifts.append((policy, metric, bv, nv))
+                    break
+    return drifts
+
+
+def _flat(x) -> list[float]:
+    if isinstance(x, (int, float)):
+        return [float(x)]
+    out: list[float] = []
+    for v in x:
+        out.extend(_flat(v))
+    return out
+
+
+def diff(base_records: list[dict], new_records: list[dict], *,
+         max_time_ratio: float = 1.30, min_wall: float = 0.5,
+         rtol: float = 1e-6, atol: float = 1e-12) -> tuple[list[str], list[str]]:
+    """Returns ``(failures, notes)`` — empty ``failures`` means pass."""
+    base_ix = _index(base_records)
+    new_ix = _index(new_records)
+    failures: list[str] = []
+    notes: list[str] = []
+
+    for key, base in base_ix.items():
+        new = new_ix.get(key)
+        label = _label(base)
+        if new is None:
+            notes.append(f"coverage lost (no new record): {label}")
+            continue
+        bw, nw = float(base.get("wall_s") or 0.0), float(new.get("wall_s") or 0.0)
+        if bw >= min_wall and nw > bw * max_time_ratio:
+            failures.append(
+                f"wall-time regression {nw / bw:.2f}x "
+                f"(>{max_time_ratio:.2f}x): {label} "
+                f"[{bw:.2f}s -> {nw:.2f}s]"
+            )
+        elif bw > 0:
+            notes.append(f"wall {nw / bw:.2f}x ({bw:.2f}s -> {nw:.2f}s): {label}")
+        if base.get("kind") == "sweep":
+            for policy, metric, bv, nv in _metric_drifts(base, new, rtol, atol):
+                if bv is None:
+                    failures.append(
+                        f"metric shape/coverage changed: {label} "
+                        f"{policy}/{metric}"
+                    )
+                else:
+                    failures.append(
+                        f"metric mean drift: {label} {policy}/{metric} "
+                        f"{bv!r} -> {nv!r}"
+                    )
+    for key, new in new_ix.items():
+        if key not in base_ix:
+            notes.append(f"new record (no baseline): {_label(new)}")
+    return failures, notes
+
+
+def _load(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f).get("records", [])
+
+
+def main(argv: list[str]) -> int:
+    argv = list(argv)
+
+    def opt(name: str, default: float) -> float:
+        flag = f"--{name}"
+        if flag not in argv:
+            return default
+        i = argv.index(flag)
+        value = float(argv[i + 1])
+        del argv[i : i + 2]
+        return value
+
+    kw = dict(
+        max_time_ratio=opt("max-time-ratio", 1.30),
+        min_wall=opt("min-wall", 0.5),
+        rtol=opt("rtol", 1e-6), atol=opt("atol", 1e-12),
+    )
+    if len(argv) != 2:
+        print("usage: python -m tools.bench_diff BASELINE NEW "
+              "[--max-time-ratio R] [--min-wall S] [--rtol R] [--atol A]")
+        return 2
+    failures, notes = diff(_load(argv[0]), _load(argv[1]), **kw)
+    for line in notes:
+        print(f"  note: {line}")
+    for line in failures:
+        print(f"  FAIL: {line}")
+    print(f"bench-diff: {len(failures)} failure(s), {len(notes)} note(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
