@@ -222,9 +222,17 @@ def run(m: int = 4096, engine_m: int = 1024, p: float = 0.5,
     for name, sorts, _mean, us in rows:
         stats[f"{name}_us"] = us.reshape(1, -1)
         stats[f"{name}_sorts"] = np.array([[sorts]])
+        stats[f"{name}_us_p50"] = np.array([[float(np.percentile(us, 50))]])
+        stats[f"{name}_us_p95"] = np.array([[float(np.percentile(us, 95))]])
     for name, sorts_ev, _mean, us_ev in engine_rows:
         stats[f"{name}_us_per_event"] = us_ev.reshape(1, -1)
         stats[f"{name}_sorts_per_event"] = np.array([[sorts_ev]])
+        stats[f"{name}_us_per_event_p50"] = np.array(
+            [[float(np.percentile(us_ev, 50))]]
+        )
+        stats[f"{name}_us_per_event_p95"] = np.array(
+            [[float(np.percentile(us_ev, 95))]]
+        )
     stats["alloc_speedup_vs_seed"] = np.array([[speedup_vs_seed]])
     stats["alloc_speedup_vs_unfused"] = np.array([[speedup_vs_unfused]])
     stats["engine_speedup"] = np.array([[engine_speedup]])
@@ -263,17 +271,26 @@ def main(smoke: bool = False):
     spec = res.spec
     lines = [
         f"components at M={spec['m']}, n_chips={spec['n_chips']}, "
-        f"p={spec['p']} ({res.backend}, min of {spec['repeats']} repeats):",
-        f"{'component':>22s} {'sorts/call':>10s} {'us/call':>12s}",
+        f"p={spec['p']} ({res.backend}, over {spec['repeats']} repeats):",
+        f"{'component':>22s} {'sorts/call':>10s} {'us_min':>10s} "
+        f"{'us_p50':>10s} {'us_p95':>10s}",
     ]
-    for name, sorts, best, _ in rows:
-        lines.append(f"{name:>22s} {sorts:10.0f} {best:12.1f}")
+    for name, sorts, best, us in rows:
+        p50, p95 = np.percentile(us, [50, 95])
+        lines.append(
+            f"{name:>22s} {sorts:10.0f} {best:10.1f} {p50:10.1f} {p95:10.1f}"
+        )
     lines.append("")
     lines.append(f"full event scan at M={spec['engine_m']} (pre-arrived, "
                  f"{spec['engine_m']} events):")
-    lines.append(f"{'variant':>22s} {'sorts/ev':>10s} {'us/event':>12s}")
-    for name, sorts_ev, best_ev, _ in engine_rows:
-        lines.append(f"{name:>22s} {sorts_ev:10.1f} {best_ev:12.1f}")
+    lines.append(f"{'variant':>22s} {'sorts/ev':>10s} {'us_min':>10s} "
+                 f"{'us_p50':>10s} {'us_p95':>10s}")
+    for name, sorts_ev, best_ev, us_ev in engine_rows:
+        p50, p95 = np.percentile(us_ev, [50, 95])
+        lines.append(
+            f"{name:>22s} {sorts_ev:10.1f} {best_ev:10.1f} "
+            f"{p50:10.1f} {p95:10.1f}"
+        )
     st = res.stats["hesrpt"]
     vs_seed = float(st["alloc_speedup_vs_seed"][0, 0])
     vs_unfused = float(st["alloc_speedup_vs_unfused"][0, 0])

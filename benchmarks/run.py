@@ -1,10 +1,17 @@
 """Benchmark aggregator: one section per paper table/figure + beyond-paper
-benches.  ``python -m benchmarks.run [--quick] [--smoke]``.
+benches.  ``python -m benchmarks.run [--quick] [--smoke]
+[--profile-dir DIR]``.
 
 ``--quick`` shrinks the expensive sweeps; ``--smoke`` is the CI tier-1
 gate: every section that exercises the allocation engine runs at tiny
 sizes (seconds, not minutes) so the sweeps cannot silently rot, and the
 long-running extras (speedup timings, kernel micro-bench) are skipped.
+
+``--profile-dir DIR`` wraps the whole run in ``jax.profiler.start_trace``:
+the ``StepTraceAnnotation`` markers ``core/sweeps.py`` emits around each
+compiled executor call (named by policy/scenario) then land in a
+Perfetto-loadable trace under ``DIR`` — open it at https://ui.perfetto.dev
+to see per-policy device time next to XLA's own slices.
 """
 
 from __future__ import annotations
@@ -28,6 +35,10 @@ def _section(title):
 def main() -> None:
     smoke = "--smoke" in sys.argv
     quick = smoke or "--quick" in sys.argv
+    profile_dir = None
+    if "--profile-dir" in sys.argv:
+        profile_dir = sys.argv[sys.argv.index("--profile-dir") + 1]
+        jax.profiler.start_trace(profile_dir)
     t0 = time.time()
 
     _section("Fig 3 — heSRPT 3-job trace (s(k)=k^0.5, N=500)")
@@ -90,6 +101,14 @@ def main() -> None:
     text, _ = estimation.main(quick=quick, smoke=smoke)
     print(text)
 
+    _section("Beyond paper — in-scan telemetry: streaming probes at sweep "
+             "scale " + ("(smoke)" if smoke else
+                         "(quick)" if quick else "(500 jobs x 20 seeds)"))
+    from benchmarks import telemetry
+
+    text, _ = telemetry.main(quick=quick, smoke=smoke)
+    print(text)
+
     _section("Beyond paper — scan-body profile: sort counts + fused allocate "
              + ("(smoke)" if smoke else "(M=4096 components, M=1024 scan)"))
     from benchmarks import profile_engine
@@ -117,6 +136,9 @@ def main() -> None:
 
     path = sweeps.write_bench_json()
     print(f"\nwrote {len(sweeps.RUN_LOG)} sweep records to {path}")
+    if profile_dir is not None:
+        jax.profiler.stop_trace()
+        print(f"profiler trace written under {profile_dir}")
     print(f"all benchmarks done in {time.time() - t0:.1f}s")
 
 

@@ -1,0 +1,123 @@
+"""Beyond paper: in-scan telemetry — what the probes see, at sweep scale.
+
+Runs the canonical online sweep with the ``core/telemetry.py`` streaming
+probe riding in the scan carry, so every ``BENCH_sweeps.json`` row from
+this section carries time-weighted telemetry columns (``tel_*_mean`` /
+``tel_*_max``) next to the flow-time metrics: system efficiency
+(sum theta_i^p), utilization, queue length and allocation entropy, plus
+the p-hat absolute-error probe on the estimator arm.  Also cross-checks
+one trajectory's streaming aggregates against the full series read-out
+reduced host-side (``analysis.time_weighted_stats``) — the O(1) stream
+must agree with the O(E) series to float tolerance.
+
+``python -m benchmarks.telemetry [--smoke]``; runs as a section of
+``benchmarks/run.py`` (including ``--smoke``), logging ``kind="sweep"``
+records whose specs carry the ``telemetry`` field.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+POLICIES = ("hesrpt", "equi")
+RATES = (0.5, 2.0, 8.0)
+
+
+def series_stream_crosscheck(*, n_jobs=60, rate=2.0, p=0.5, seed=0) -> float:
+    """Max |stream - series| over every metric's mean/max on one run."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+    from repro.core.analysis import time_weighted_stats
+    from repro.core.policies import make_policy
+    from repro.core.scenarios import make_scenario
+    from repro.core.telemetry import DEFAULT_METRICS, make_probe
+
+    scn = make_scenario("poisson", p=p)(jax.random.key(seed), n_jobs, rate)
+    rule = engine.continuous_rule(
+        make_policy("hesrpt"), 1.0, dtype=jnp.result_type(float)
+    )
+    out = {}
+    for mode in ("series", "stream"):
+        probe = make_probe(DEFAULT_METRICS, mode=mode, n_jobs=n_jobs)
+        out[mode] = engine.run(
+            scn.x0, scn.arrival_times, p, rule, telemetry=probe
+        ).telemetry
+    series = {k: np.asarray(v) for k, v in out["series"].series.items()}
+    agg = {k: np.asarray(v) for k, v in out["stream"].aggregates.items()}
+    worst = 0.0
+    for m in DEFAULT_METRICS:
+        ref = time_weighted_stats(series[m], series["dt"])
+        worst = max(
+            worst,
+            abs(float(agg[f"{m}_mean"]) - ref["mean"]),
+            abs(float(agg[f"{m}_max"]) - ref["max"]),
+        )
+    return worst
+
+
+def run(*, n_jobs, n_seeds, rates=RATES, p=0.5, seed=0):
+    """The telemetry-instrumented sweeps this section logs: the online
+    Poisson sweep with the default probe, and the estimator arm on the
+    drift scenario with the p-hat error probe added."""
+    from repro.core.sweeps import Sweep, run_sweep
+
+    online = run_sweep(Sweep.create(
+        list(POLICIES), list(rates), scenario="poisson", n_jobs=n_jobs,
+        n_seeds=n_seeds, p=p, seed=seed, telemetry=True,
+    ))
+    est = run_sweep(Sweep.create(
+        ["hesrpt"], [2.0], scenario="drift_poisson",
+        scenario_kw={"p0": 0.7, "p1": 0.3}, n_jobs=n_jobs, n_seeds=n_seeds,
+        seed=seed, arm="estimator",
+        telemetry=("efficiency", "utilization", "queue", "p_hat_err"),
+    ))
+    return online, est
+
+
+def main(quick: bool = False, smoke: bool = False):
+    n_jobs, n_seeds = (60, 6) if smoke else (200, 10) if quick else (500, 20)
+    t0 = time.perf_counter()
+    online, est = run(n_jobs=n_jobs, n_seeds=n_seeds)
+    sweep_s = time.perf_counter() - t0
+
+    cols = ("tel_efficiency_mean", "tel_utilization_mean", "tel_queue_mean",
+            "tel_queue_max", "tel_entropy_mean")
+    lines = [
+        f"{n_jobs} jobs x {n_seeds} seeds x {len(RATES)} loads, streaming "
+        f"probe in-scan ({sweep_s:.1f}s incl. compile)",
+        f"{'policy':>8s} {'rate':>6s} " + " ".join(f"{c[4:]:>16s}" for c in cols),
+    ]
+    for name in POLICIES:
+        st = online.stats[name]
+        for r, rate in enumerate(RATES):
+            vals = (float(np.mean(st[c][r])) for c in cols)
+            lines.append(f"{name:>8s} {rate:6.1f} "
+                         + " ".join(f"{v:16.4f}" for v in vals))
+    err = est.stats["hesrpt"]
+    lines.append(
+        "estimator arm (drift 0.7 -> 0.3): time-weighted |p_hat - p| "
+        f"mean {float(np.mean(err['tel_p_hat_err_mean'])):.4f}, "
+        f"max {float(np.max(err['tel_p_hat_err_max'])):.4f}"
+    )
+
+    worst = series_stream_crosscheck()
+    lines.append(f"stream vs series aggregates (one 60-job run): "
+                 f"max abs err {worst:.2e}")
+    assert worst < 1e-9, "streaming aggregates diverged from the series"
+    return "\n".join(lines), {"online": online, "estimator": est,
+                              "cross_check": worst}
+
+
+if __name__ == "__main__":
+    import sys
+
+    import jax
+
+    # Same rationale as benchmarks/run.py: f64 so the stream/series
+    # cross-check is limited by accumulation order, not f32 rounding.
+    jax.config.update("jax_enable_x64", True)
+    print(main(smoke="--smoke" in sys.argv)[0])

@@ -37,6 +37,29 @@ def scale_free_constants(result: SimResult) -> jax.Array:
     return jnp.where(active & (theta > 0), csum / theta, jnp.nan)
 
 
+# ------------------------------------------------- time-weighted reduction
+def time_weighted_stats(values, dts) -> dict[str, float]:
+    """Host-side time-weighted summary of one telemetry series.
+
+    ``values``/``dts`` are per-event arrays (``core/telemetry.py`` series
+    mode: epoch metric values and epoch lengths, no-op epochs carrying
+    ``dt == 0``).  Returns ``{"mean", "max", "time"}`` with the mean
+    weighted by epoch length and the max taken over positive-length epochs
+    — the same definitions the in-scan streaming probe accumulates, so
+    this is the cross-check (and the post-hoc path for ``record=True``
+    sized runs).  NumPy on purpose: runs on host artifacts.
+    """
+    v = np.asarray(values, dtype=np.float64)
+    dt = np.asarray(dts, dtype=np.float64)
+    t = float(dt.sum())
+    live = dt > 0
+    return {
+        "mean": float((v * dt).sum() / t) if t > 0 else 0.0,
+        "max": float(v[live].max()) if live.any() else 0.0,
+        "time": t,
+    }
+
+
 # ------------------------------------------------- per-cell aggregation
 def seed_axis_stats(values) -> dict[str, list]:
     """Per-cell summary of one sweep stat over its seed axis.

@@ -190,6 +190,7 @@ def simulate_scenario(
     rel_tol: float = 1e-9,
     horizon: int | None = None,
     fused: bool = False,
+    telemetry=None,
 ) -> OnlineSimResult:
     """Run one drawn :class:`Scenario` through the engine.
 
@@ -213,6 +214,10 @@ def simulate_scenario(
     ``fused=True`` runs the engine on the ``kernels/alloc.py`` fused
     allocate (heSRPT only — other policies raise): fewer sorts per event
     on CPU, the Pallas kernel on TPU, chip-exact either way.
+
+    ``telemetry`` takes a probe (``core/telemetry.py``); the return value
+    is then ``(OnlineSimResult, TelemetryResult)``.  The trajectory is
+    bit-for-bit the probe-free run either way.
     """
     x0 = jnp.asarray(scn.x0)
     dtype = jnp.result_type(x0.dtype, jnp.float32)
@@ -251,9 +256,10 @@ def simulate_scenario(
         n_alone = n_servers
     res = engine.run(
         x0, arrival_times, p_phys, rule, horizon=horizon, rel_tol=rel_tol,
-        p_drift=scn.p_drift, fused=fused,
+        p_drift=scn.p_drift, fused=fused, telemetry=telemetry,
     )
-    return _finalize(x0, arrival_times, res.completion_times, p_phys, n_alone)
+    out = _finalize(x0, arrival_times, res.completion_times, p_phys, n_alone)
+    return (out, res.telemetry) if telemetry is not None else out
 
 
 # --------------------------------------------------------------- load sweeps

@@ -87,6 +87,27 @@ class Observation(NamedTuple):
     active: jax.Array  # [M] bool, job arrived & unfinished this epoch
 
 
+class ProbeEvent(NamedTuple):
+    """What a telemetry probe (``core/telemetry.py``) sees at each event.
+
+    A strict superset of :class:`Observation`: probes additionally read the
+    epoch-start clock, the remaining sizes, the true exponent in effect
+    (post-drift), and the allocation rule's carry state — which is how the
+    p̂-error probe reaches an :class:`~repro.core.estimation.EstState`
+    without the rule knowing it is being watched.  All per-job arrays are
+    in the engine's arrival-sorted order.
+    """
+
+    t: jax.Array  # scalar epoch-start time
+    dt: jax.Array  # scalar epoch length (0 on no-op steps)
+    alloc: jax.Array  # [M] allocation held during the epoch
+    rate: jax.Array  # [M] realized service rate
+    active: jax.Array  # [M] bool, job arrived & unfinished this epoch
+    x: jax.Array  # [M] remaining sizes at epoch start
+    p: Any  # scalar or [M] true exponent in effect this epoch
+    rule_state: Any  # the allocation rule's carry state at epoch start
+
+
 class StatefulRule(NamedTuple):
     """An allocation rule with scan-carried state: ``(init, observe,
     allocate)``.
@@ -154,7 +175,8 @@ class EngineResult(NamedTuple):
     completion_times: jax.Array  # [M] absolute departure times, input order
     x_final: jax.Array  # [M] remaining sizes at horizon, arrival-sorted order
     order: jax.Array  # [M] arrival-sorted permutation used internally
-    trace: EngineTrace | None  # populated when ``record=True``
+    trace: EngineTrace | None = None  # populated when ``record=True``
+    telemetry: Any = None  # probe read-out when ``run(telemetry=)`` is set
 
 
 # ----------------------------------------------------------- allocation rules
@@ -342,6 +364,7 @@ def run(
     record: bool = False,
     p_drift: PDrift | None = None,
     fused: bool = False,
+    telemetry: Any = None,
 ) -> EngineResult:
     """Run the event-driven fluid trajectory to completion in one scan.
 
@@ -384,6 +407,14 @@ def run(
     :func:`continuous_rule` / :func:`quantized_rule` for the heSRPT policy
     (chip-exact; see that module for the collapse) — and raises
     ``ValueError`` for rules without one.
+
+    ``telemetry`` takes a probe (``core/telemetry.py``: ``(init, step,
+    finalize)``) whose state rides in the scan carry; each step sees the
+    epoch's :class:`ProbeEvent` and the finalized read-out is returned on
+    ``EngineResult.telemetry``.  The branch is resolved at trace time:
+    with ``telemetry=None`` the compiled program is *exactly* the probe-
+    free scan — trajectories stay bit-for-bit identical (tested against
+    the golden pins).
     """
     if fused:
         fused_rule = getattr(rule, "fused_variant", None)
@@ -418,7 +449,10 @@ def run(
     srule = as_stateful(rule)
 
     def body(carry, _):
-        x, t, i, times, st = carry
+        if telemetry is None:
+            x, t, i, times, st = carry
+        else:
+            x, t, i, times, st, tel = carry
         active = (idx < i) & (x > 0)
         x_act = jnp.where(active, x, 0.0)
         if p_drift is None:
@@ -464,16 +498,33 @@ def run(
             st, Observation(alloc=alloc, rate=rate, dt=dt, active=active)
         )
         out = (alloc, t, x) if record else None
-        return (x_new, t_new, i_new, times, st_new), out
+        if telemetry is None:
+            return (x_new, t_new, i_new, times, st_new), out
+        tel_new, tel_out = telemetry.step(
+            tel,
+            ProbeEvent(
+                t=t, dt=dt, alloc=alloc, rate=rate, active=active, x=x,
+                p=p_now, rule_state=st,
+            ),
+        )
+        return (x_new, t_new, i_new, times, st_new, tel_new), (out, tel_out)
 
     init = (xs, jnp.asarray(t0, dtype), i0, jnp.zeros(M, dtype), srule.init())
-    (x_fin, _, _, times, _), ys = jax.lax.scan(body, init, None, length=E)
+    if telemetry is not None:
+        init = (*init, telemetry.init())
+    carry_fin, ys = jax.lax.scan(body, init, None, length=E)
+    x_fin, _, _, times = carry_fin[:4]
+    tel_result = None
+    if telemetry is not None:
+        ys, tel_ys = ys
+        tel_result = telemetry.finalize(carry_fin[5], tel_ys)
     # Safety: any job that never departed (pathological rule) -> inf.
     times = jnp.where(x_fin > 0, jnp.inf, times)
     times_in = jnp.zeros(M, dtype).at[order].set(times)  # back to input order
     trace = EngineTrace(alloc=ys[0], times=ys[1], sizes=ys[2]) if record else None
     return EngineResult(
-        completion_times=times_in, x_final=x_fin, order=order, trace=trace
+        completion_times=times_in, x_final=x_fin, order=order, trace=trace,
+        telemetry=tel_result,
     )
 
 
@@ -758,6 +809,7 @@ __all__ = [
     "EngineTrace",
     "Observation",
     "PDrift",
+    "ProbeEvent",
     "StatefulRule",
     "as_stateful",
     "continuous_rule",

@@ -339,6 +339,7 @@ def simulate_scenario_estimated(
     min_chips: int = 1,
     rel_tol: float = 1e-9,
     horizon: int | None = None,
+    telemetry=None,
 ):
     """Run a drawn :class:`~repro.core.scenarios.Scenario` with the
     estimator in the loop: the policy allocates with the blended p̂ fit
@@ -349,6 +350,13 @@ def simulate_scenario_estimated(
     The estimator-free arms of the same comparison (oracle-p, stale-p)
     are ``arrivals.simulate_scenario`` with/without a pinned ``p_hat`` —
     see ``benchmarks/estimation.py``.
+
+    ``telemetry`` takes a probe (``core/telemetry.py``); the return is
+    then ``(OnlineSimResult, TelemetryResult)``.  This is the wrapper
+    where the ``p_hat_err`` metric earns its keep: a probe built with
+    ``p_hat_reader=p_hat_error_metric(prior_p, prior_weight=...)`` reads
+    the blended p̂ straight out of the rule's scan-carried
+    :class:`EstState`.
     """
     from repro.core.arrivals import _finalize
 
@@ -364,10 +372,11 @@ def simulate_scenario_estimated(
     )
     res = engine.run(
         x0, arr, p_phys, rule, horizon=horizon, rel_tol=rel_tol,
-        p_drift=scn.p_drift,
+        p_drift=scn.p_drift, telemetry=telemetry,
     )
     n_alone = n_chips if n_chips is not None else n_servers
-    return _finalize(x0, arr, res.completion_times, p_phys, n_alone)
+    out = _finalize(x0, arr, res.completion_times, p_phys, n_alone)
+    return (out, res.telemetry) if telemetry is not None else out
 
 
 __all__ = [

@@ -42,20 +42,32 @@ agreement with the pre-refactor outputs.
 
 from __future__ import annotations
 
+import functools
 import json
+import os
+import subprocess
 import time
+from datetime import datetime, timezone
 from typing import Any, NamedTuple
 
 import numpy as np
 
 __all__ = [
     "RUN_LOG",
+    "SCHEMA_VERSION",
     "Sweep",
     "SweepResult",
     "bench_records",
+    "provenance",
     "run_sweep",
     "write_bench_json",
 ]
+
+#: Version of the ``BENCH_sweeps.json`` record layout.  Bump when a field
+#: changes meaning; ``tools/bench_diff.py`` parses rows from any version
+#: tolerantly (missing fields are never a failure).
+#: v2: provenance stamps + telemetry columns (this layer); v1: unstamped.
+SCHEMA_VERSION = 2
 
 #: Metrics computed per class (shape ``[n_rates, n_seeds, K]``); everything
 #: else must be a scalar field of ``OnlineSimResult`` (``[n_rates, n_seeds]``).
@@ -67,6 +79,47 @@ CLASS_METRICS = {
 #: Estimation-regime arms (see ``benchmarks/estimation.py``): how the policy
 #: learns the speedup exponent on a p-drift scenario.
 ARMS = ("oracle", "stale", "estimator")
+
+
+@functools.lru_cache(maxsize=1)
+def _build_info() -> dict:
+    """The per-process half of the provenance stamp (git SHA + library
+    versions are fixed for the process lifetime; the timestamp is not)."""
+    import jax
+
+    try:
+        import jaxlib
+
+        jaxlib_version = jaxlib.__version__
+    except Exception:  # pragma: no cover - jaxlib always ships with jax
+        jaxlib_version = None
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip() or None
+    except Exception:
+        sha = None  # not a checkout (installed wheel, stripped CI tarball)
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+    }
+
+
+def provenance() -> dict:
+    """Provenance stamp for one benchmark record: schema version, git SHA
+    (``None`` outside a checkout), jax/jaxlib versions, and the UTC
+    creation timestamp — enough to answer "which code produced this row,
+    on which stack, when" from the artifact alone."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        **_build_info(),
+        "created_utc": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+    }
 
 
 def _hashable(v):
@@ -105,6 +158,7 @@ class Sweep(NamedTuple):
     arm: str | None = None  # estimation regime: oracle | stale | estimator
     arm_kw: tuple = ()  # e.g. (("discount", 0.9), ("prior_weight", 1.0))
     fused: bool = False  # kernels/alloc.py fused allocate (quantized heSRPT)
+    telemetry: tuple[str, ...] = ()  # in-scan probe metrics -> tel_* columns
 
     @classmethod
     def create(
@@ -128,9 +182,11 @@ class Sweep(NamedTuple):
         arm: str | None = None,
         arm_kw: dict | tuple | None = None,
         fused: bool = False,
+        telemetry=(),
     ) -> "Sweep":
         from repro.core.arrivals import OnlineSimResult
         from repro.core.multiclass import as_specs
+        from repro.core.telemetry import DEFAULT_METRICS, METRICS
 
         if classes is not None:
             classes = as_specs(classes)
@@ -180,6 +236,28 @@ class Sweep(NamedTuple):
             bad = tuple(p for p in policies if p != "hesrpt")
             if bad:
                 raise ValueError(f"fused sweeps support only heSRPT, got {bad}")
+        if telemetry is True:
+            telemetry = DEFAULT_METRICS
+        telemetry = tuple(telemetry or ())
+        if telemetry:
+            unknown = tuple(m for m in telemetry if m not in METRICS)
+            if unknown:
+                raise ValueError(
+                    f"unknown telemetry metric(s) {unknown}; known: {METRICS}"
+                )
+            if classes is not None:
+                # The multi-class cells run simulate_multiclass, which owns
+                # its own engine invocation; telemetry is not threaded
+                # through it yet (ROADMAP: windowed per-class aggregates
+                # belong to the streaming-engine refactor).
+                raise ValueError(
+                    "telemetry columns are single-class only for now"
+                )
+            if "p_hat_err" in telemetry and arm != "estimator":
+                raise ValueError(
+                    "telemetry metric 'p_hat_err' needs arm='estimator' "
+                    "(only an estimating rule carries a p-hat to be wrong)"
+                )
         return cls(
             policies=tuple(policies),
             rates=tuple(float(r) for r in rates),
@@ -199,6 +277,7 @@ class Sweep(NamedTuple):
             arm=arm,
             arm_kw=_hashable(arm_kw or {}),
             fused=bool(fused),
+            telemetry=telemetry,
         )
 
     def jobs_per_seed(self) -> int:
@@ -228,6 +307,33 @@ def _cell_fn(spec: Sweep, name: str):
     from repro.core.scenarios import make_scenario
 
     kw = dict(spec.scenario_kw)
+
+    tel_probe = None
+    if spec.telemetry:
+        # O(1) streaming aggregates in the scan carry — the per-cell
+        # scalar columns (tel_*_mean / tel_*_max) cost no per-event
+        # memory, so telemetry rides along at any sweep scale.
+        from repro.core.telemetry import make_probe, p_hat_error_metric
+
+        reader = None
+        if spec.arm == "estimator":
+            akw_t = dict(spec.arm_kw)
+            reader = p_hat_error_metric(
+                kw["p0"], prior_weight=akw_t.get("prior_weight", 1.0)
+            )
+        tel_probe = make_probe(
+            spec.telemetry,
+            mode="stream",
+            alloc_unit=float(spec.n_chips) if spec.n_chips else 1.0,
+            n_jobs=spec.n_jobs,
+            p_hat_reader=reader,
+            dtype=jnp.result_type(float),
+        )
+
+    def tel_values(tel):
+        from repro.core.telemetry import scalar_values
+
+        return scalar_values(tel, spec.telemetry)
 
     def metrics_of(res, scn):
         out = []
@@ -284,19 +390,24 @@ def _cell_fn(spec: Sweep, name: str):
             scn = sampler(key, spec.n_jobs, rate)
             if spec.arm == "oracle":
                 # simulate_scenario shows the rule the CURRENT true regime.
-                res = simulate_scenario(scn, p0, spec.n_servers, pol)
+                res = simulate_scenario(
+                    scn, p0, spec.n_servers, pol, telemetry=tel_probe
+                )
             elif spec.arm == "stale":
                 # a pinned p_hat: the scheduler never notices the drift.
                 res = simulate_scenario(
                     scn._replace(p_hat=jnp.asarray(p0)), p0, spec.n_servers,
-                    pol,
+                    pol, telemetry=tel_probe,
                 )
             else:  # estimator: allocate with the online blended p-hat
                 res = simulate_scenario_estimated(
                     scn, p0, spec.n_servers, pol, prior_p=p0,
                     prior_weight=akw.get("prior_weight", 1.0),
-                    discount=akw.get("discount", 1.0),
+                    discount=akw.get("discount", 1.0), telemetry=tel_probe,
                 )
+            if tel_probe is not None:
+                res, tel = res
+                return metrics_of(res, scn) + tel_values(tel)
             return metrics_of(res, scn)
 
         return one
@@ -313,9 +424,12 @@ def _cell_fn(spec: Sweep, name: str):
     # Estimation noise and chip quantization both break the carried-rank
     # invariants; per-job exponents (``p_job``) and p-drift boundaries
     # (``p_drift``) are static per sampler, so the branch is resolved at
-    # trace time.
+    # trace time.  Telemetry probes hook the generic scan's ProbeEvent,
+    # so a telemetry sweep takes that path too.
     rank_pol = (
-        make_rank_policy(name) if spec.n_chips is None and not noisy else None
+        make_rank_policy(name)
+        if spec.n_chips is None and not noisy and not spec.telemetry
+        else None
     )
     pol = make_policy(
         name,
@@ -334,7 +448,11 @@ def _cell_fn(spec: Sweep, name: str):
             res = simulate_scenario(
                 scn, spec.p, spec.n_servers, pol, n_chips=spec.n_chips,
                 min_chips=spec.min_chips, fused=spec.fused,
+                telemetry=tel_probe,
             )
+            if tel_probe is not None:
+                res, tel = res
+                return metrics_of(res, scn) + tel_values(tel)
         return metrics_of(res, scn)
 
     return one
@@ -344,6 +462,14 @@ def _cell_fn(spec: Sweep, name: str):
 def _metric_ndim(spec: Sweep, metric: str) -> int:
     """Trailing rank of one cell's value for ``metric`` (0 or 1)."""
     return 1 if metric in CLASS_METRICS else 0
+
+
+def _out_names(spec: Sweep) -> tuple[str, ...]:
+    """Every stat column one cell emits: the simulator metrics followed by
+    the telemetry scalar columns (``tel_<metric>_mean`` / ``_max``)."""
+    from repro.core.telemetry import scalar_columns
+
+    return spec.metrics + scalar_columns(spec.telemetry)
 
 
 def _build_fn(
@@ -397,13 +523,13 @@ def _build_fn(
         in_specs = (P(), P("rates"))
         out_specs = tuple(
             P("rates", None, *(None,) * _metric_ndim(spec, m))
-            for m in spec.metrics
+            for m in _out_names(spec)
         )
     else:
         in_specs = (P("seeds"), P())
         out_specs = tuple(
             P(None, "seeds", *(None,) * _metric_ndim(spec, m))
-            for m in spec.metrics
+            for m in _out_names(spec)
         )
 
     def sharded(keys, rates):
@@ -534,6 +660,7 @@ class SweepResult(NamedTuple):
         is_sweep = isinstance(self.spec, Sweep)
         return {
             "kind": "sweep" if is_sweep else self.spec.get("kind", "bench"),
+            "provenance": provenance(),
             "spec": self._spec_jsonable(),
             "cells": cells,
             "n_seeds": self.spec.n_seeds if is_sweep else None,
@@ -596,6 +723,7 @@ class SweepResult(NamedTuple):
             metrics=s["metrics"], arm=s["arm"],
             arm_kw=dict((k, _hashable(v)) for k, v in s["arm_kw"]),
             fused=s.get("fused", False),
+            telemetry=s.get("telemetry", ()),
         )
         stats = {
             name: {m: np.asarray(v, dtype=np.float64) for m, v in by_m.items()}
@@ -625,7 +753,9 @@ def bench_records() -> list[dict]:
 def write_bench_json(path: str = "BENCH_sweeps.json") -> str:
     """Flush the run log to ``path`` (the perf-trajectory artifact)."""
     with open(path, "w") as f:
-        json.dump({"records": RUN_LOG}, f, indent=1)
+        json.dump(
+            {"schema_version": SCHEMA_VERSION, "records": RUN_LOG}, f, indent=1
+        )
     return path
 
 
@@ -682,15 +812,22 @@ def run_sweep(
     stats: dict[str, dict[str, np.ndarray]] = {}
     compile_s = 0.0
     wall_s = 0.0
-    for name in spec.policies:
+    for step, name in enumerate(spec.policies):
         f, c_s = _executor(spec, name, keys, rates, chunk, shard, shard_axis)
         compile_s += c_s
         t0 = time.perf_counter()
-        out = f(keys, rates)
-        out = tuple(np.asarray(a) for a in out)  # blocks until ready
+        # StepTraceAnnotation is a no-op unless a jax.profiler trace is
+        # active (``benchmarks/run.py --profile-dir``); under one, each
+        # policy's executor shows up as its own named step in the
+        # Perfetto/TensorBoard timeline.
+        with jax.profiler.StepTraceAnnotation(
+            "run_sweep", step_num=step, policy=name, scenario=spec.scenario
+        ):
+            out = f(keys, rates)
+            out = tuple(np.asarray(a) for a in out)  # blocks until ready
         wall_s += time.perf_counter() - t0
         stats[name] = {
-            m: a[:R, :S] for m, a in zip(spec.metrics, out, strict=True)
+            m: a[:R, :S] for m, a in zip(_out_names(spec), out, strict=True)
         }
     result = SweepResult(
         spec=spec,

@@ -1,0 +1,251 @@
+"""In-scan telemetry probes (core/telemetry.py) and their sweep threading.
+
+The contract under test has three legs:
+
+- **neutrality** — attaching a probe never changes the trajectory: the
+  completion times with ``telemetry=None``, a series probe, and a stream
+  probe must be bit-for-bit identical, across the continuous, quantized
+  and fused rule paths (the golden pins in test_sweeps.py already enforce
+  the ``telemetry=None`` program is the pre-telemetry one);
+- **stream == series** — the O(1) streaming aggregates must reproduce the
+  full series reduced host-side (``analysis.time_weighted_stats``), and
+  the time-weighted histogram mass must account for the whole span;
+- **sweep threading** — ``Sweep.create(telemetry=)`` appends ``tel_*``
+  columns without perturbing the base metrics, validates its inputs, and
+  stamps provenance into every benchmark record.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, make_policy, make_scenario
+from repro.core.analysis import time_weighted_stats
+from repro.core.sweeps import SCHEMA_VERSION, Sweep, provenance, run_sweep
+from repro.core.telemetry import (
+    DEFAULT_METRICS,
+    default_hist_ranges,
+    make_probe,
+    p_hat_error_metric,
+    scalar_columns,
+    scalar_values,
+)
+
+N_JOBS = 40
+
+
+def _stream(seed=0, rate=2.0, n_jobs=N_JOBS, p=0.5):
+    scn = make_scenario("poisson", p=p)(jax.random.key(seed), n_jobs, rate)
+    return scn.x0, scn.arrival_times
+
+
+def _rule(kind, dtype):
+    pol = make_policy("hesrpt")
+    if kind == "continuous":
+        return engine.continuous_rule(pol, 1.0, dtype=dtype), 1.0, False
+    if kind == "quantized":
+        return engine.quantized_rule(pol, 64, dtype=dtype), 64.0, False
+    assert kind == "fused"
+    return engine.quantized_rule(pol, 64, dtype=dtype), 64.0, True
+
+
+# ----------------------------------------------------------------- neutrality
+@pytest.mark.parametrize("kind", ["continuous", "quantized", "fused"])
+def test_probe_never_changes_the_trajectory(kind):
+    x0, arr = _stream()
+    dtype = x0.dtype
+    rule, unit, fused = _rule(kind, dtype)
+    base = engine.run(x0, arr, 0.5, rule, fused=fused)
+    assert base.telemetry is None
+    for mode in ("series", "stream"):
+        probe = make_probe(
+            DEFAULT_METRICS, mode=mode, alloc_unit=unit, n_jobs=N_JOBS,
+            dtype=dtype,
+        )
+        res = engine.run(x0, arr, 0.5, rule, fused=fused, telemetry=probe)
+        np.testing.assert_array_equal(
+            np.asarray(base.completion_times),
+            np.asarray(res.completion_times),
+        )
+        assert res.telemetry is not None
+
+
+def test_probe_neutral_under_jit_and_with_record():
+    x0, arr = _stream(seed=3)
+    rule, unit, _ = _rule("continuous", x0.dtype)
+    probe = make_probe(("efficiency", "queue"), mode="stream",
+                       alloc_unit=unit, n_jobs=N_JOBS, dtype=x0.dtype)
+
+    @jax.jit
+    def with_probe(x, a):
+        return engine.run(x, a, 0.5, rule, record=True, telemetry=probe)
+
+    res = with_probe(x0, arr)
+    base = engine.run(x0, arr, 0.5, rule)
+    np.testing.assert_array_equal(np.asarray(base.completion_times),
+                                  np.asarray(res.completion_times))
+    assert res.trace is not None  # record and telemetry compose
+    assert float(res.telemetry.aggregates["queue_max"]) >= 1.0
+
+
+# ------------------------------------------------------------ stream == series
+@pytest.mark.parametrize("kind", ["continuous", "quantized"])
+def test_stream_aggregates_match_series_reduction(kind):
+    x0, arr = _stream(seed=1)
+    dtype = x0.dtype
+    rule, unit, fused = _rule(kind, dtype)
+    tel = {}
+    for mode in ("series", "stream"):
+        probe = make_probe(DEFAULT_METRICS, mode=mode, alloc_unit=unit,
+                           n_jobs=N_JOBS, dtype=dtype)
+        tel[mode] = engine.run(
+            x0, arr, 0.5, rule, fused=fused, telemetry=probe
+        ).telemetry
+    series = {k: np.asarray(v) for k, v in tel["series"].series.items()}
+    agg = tel["stream"].aggregates
+    for m in DEFAULT_METRICS:
+        ref = time_weighted_stats(series[m], series["dt"])
+        assert float(agg[f"{m}_mean"]) == pytest.approx(ref["mean"], abs=1e-12)
+        assert float(agg[f"{m}_max"]) == pytest.approx(ref["max"], abs=1e-12)
+    assert float(agg["time"]) == pytest.approx(
+        float(series["dt"].sum()), abs=1e-12
+    )
+
+
+def test_histogram_mass_accounts_for_the_whole_span():
+    x0, arr = _stream(seed=2)
+    rule, unit, _ = _rule("continuous", x0.dtype)
+    probe = make_probe(DEFAULT_METRICS, mode="stream", alloc_unit=unit,
+                       n_jobs=N_JOBS, hist_bins=16, dtype=x0.dtype)
+    tel = engine.run(x0, arr, 0.5, rule, telemetry=probe).telemetry
+    total = float(tel.aggregates["time"])
+    for m in DEFAULT_METRICS:
+        hist = np.asarray(tel.aggregates[f"{m}_hist"])
+        edges = np.asarray(tel.hist_edges[m])
+        assert hist.shape == (16,) and edges.shape == (17,)
+        assert np.all(hist >= 0)
+        assert float(hist.sum()) == pytest.approx(total, rel=1e-12)
+        lo, hi = default_hist_ranges(N_JOBS)[m]
+        assert edges[0] == pytest.approx(lo) and edges[-1] == pytest.approx(hi)
+
+
+def test_series_values_respect_structural_bounds():
+    x0, arr = _stream(seed=4)
+    probe = make_probe(DEFAULT_METRICS, mode="series", dtype=x0.dtype)
+    rule, _, _ = _rule("continuous", x0.dtype)
+    tel = engine.run(x0, arr, 0.5, rule, telemetry=probe).telemetry
+    s = {k: np.asarray(v) for k, v in tel.series.items()}
+    live = s["dt"] > 0
+    assert np.all(np.diff(s["t"]) >= 0)  # event starts are ordered
+    assert np.all(s["utilization"] <= 1.0 + 1e-12)  # Σθ <= 1 (continuous)
+    q = s["queue"]
+    assert np.all((q >= 0) & (q <= N_JOBS)) and np.all(q == np.round(q))
+    with np.errstate(divide="ignore"):
+        cap = np.where(q > 0, np.log(np.maximum(q, 1.0)), 0.0)
+    assert np.all(s["entropy"][live] <= cap[live] + 1e-12)
+    # efficiency Σ θ^p is bounded by m(t)^{1-p} (Cauchy-Schwarz at p=1/2)
+    assert np.all(s["efficiency"][live] <= np.sqrt(np.maximum(q[live], 1.0)) + 1e-12)
+
+
+def test_p_hat_err_probe_tracks_the_estimator():
+    from repro.core.estimation import estimating_rule
+
+    x0, arr = _stream(seed=5, p=0.5)
+    dtype = x0.dtype
+    prior = 0.9  # wrong prior: the fit must pull the error down
+    rule = estimating_rule(make_policy("hesrpt"), 1.0, prior_p=prior,
+                           dtype=dtype, n_jobs=N_JOBS)
+    reader = p_hat_error_metric(prior)
+    tel = {}
+    for mode in ("series", "stream"):
+        probe = make_probe(("p_hat_err", "queue"), mode=mode, n_jobs=N_JOBS,
+                           p_hat_reader=reader, dtype=dtype)
+        tel[mode] = engine.run(x0, arr, 0.5, rule, telemetry=probe).telemetry
+    s = {k: np.asarray(v) for k, v in tel["series"].series.items()}
+    err, busy = s["p_hat_err"], (s["dt"] > 0) & (s["queue"] > 0)
+    assert np.all((err >= 0) & (err <= 1.0))
+    # the first busy epoch sees the raw prior; the fit must improve on it
+    first = err[busy][0]
+    assert first == pytest.approx(abs(prior - 0.5), abs=1e-12)
+    assert err[busy][-1] < first
+    ref = time_weighted_stats(err, s["dt"])
+    mean = float(tel["stream"].aggregates["p_hat_err_mean"])
+    assert mean == pytest.approx(ref["mean"], abs=1e-12)
+    assert 0.0 < mean < abs(prior - 0.5) + 0.11  # idle epochs read err=|0-p|
+
+
+# ------------------------------------------------------------------ validation
+def test_make_probe_validation():
+    with pytest.raises(ValueError, match="mode"):
+        make_probe(mode="rolling")
+    with pytest.raises(ValueError, match="unknown telemetry metric"):
+        make_probe(("throughput",), mode="series")
+    with pytest.raises(ValueError, match="p_hat_reader"):
+        make_probe(("p_hat_err",), mode="series")
+    with pytest.raises(ValueError, match="n_jobs"):
+        make_probe(mode="stream")
+    with pytest.raises(ValueError, match="stream-mode"):
+        probe = make_probe(("queue",), mode="series")
+        x0, arr = _stream(seed=6, n_jobs=10)
+        rule, _, _ = _rule("continuous", x0.dtype)
+        tel = engine.run(x0, arr, 0.5, rule, telemetry=probe).telemetry
+        scalar_values(tel, ("queue",))
+
+
+def test_sweep_telemetry_validation():
+    with pytest.raises(ValueError, match="unknown telemetry"):
+        Sweep.create(["hesrpt"], [1.0], telemetry=("nope",))
+    with pytest.raises(ValueError, match="single-class"):
+        Sweep.create(["hesrpt"], [1.0], scenario="multiclass_poisson",
+                     classes=((0.3, 1.0), (0.7, 1.0)), telemetry=True)
+    with pytest.raises(ValueError, match="estimator"):
+        Sweep.create(["hesrpt"], [1.0], telemetry=("p_hat_err",))
+
+
+# -------------------------------------------------------------- sweep threading
+def test_sweep_telemetry_columns_ride_along_without_perturbing_metrics():
+    base = Sweep.create(["hesrpt", "srpt"], [0.5, 4.0], n_jobs=30, n_seeds=3)
+    tele = base._replace(telemetry=DEFAULT_METRICS)
+    r0 = run_sweep(base, log=False)
+    r1 = run_sweep(tele, log=False)
+    for pol in ("hesrpt", "srpt"):
+        for metric in base.metrics:
+            np.testing.assert_array_equal(r0.stats[pol][metric],
+                                          r1.stats[pol][metric])
+        for col in scalar_columns(DEFAULT_METRICS):
+            assert r1.stats[pol][col].shape == (2, 3)
+            assert np.all(np.isfinite(r1.stats[pol][col]))
+        util = r1.stats[pol]["tel_utilization_max"]
+        assert np.all((util > 0) & (util <= 1.0 + 1e-12))
+
+
+def test_sweep_telemetry_quantized_and_estimator_arms():
+    q = Sweep.create(["hesrpt"], [2.0], n_jobs=24, n_seeds=2, n_chips=64,
+                     telemetry=("utilization", "queue"))
+    rq = run_sweep(q, log=False)
+    util = rq.stats["hesrpt"]["tel_utilization_max"]
+    assert np.all(util <= 1.0 + 1e-12)  # chips normalized by n_chips
+    est = Sweep.create(["hesrpt"], [2.0], scenario="drift_poisson",
+                       scenario_kw={"p0": 0.7, "p1": 0.3}, n_jobs=30,
+                       n_seeds=2, arm="estimator",
+                       telemetry=("queue", "p_hat_err"))
+    re_ = run_sweep(est, log=False)
+    err = re_.stats["hesrpt"]["tel_p_hat_err_mean"]
+    assert np.all((err >= 0) & (err <= 1.0))
+
+
+def test_record_carries_provenance_and_round_trips():
+    spec = Sweep.create(["hesrpt"], [1.0], n_jobs=16, n_seeds=2,
+                        telemetry=("queue",))
+    res = run_sweep(spec, log=False)
+    rec = res.record()
+    prov = rec["provenance"]
+    assert prov["schema_version"] == SCHEMA_VERSION
+    assert prov["jax_version"] == jax.__version__
+    assert "created_utc" in prov
+    assert set(prov) == set(provenance())
+    assert "tel_queue_mean" in rec["cells"]["hesrpt"]
+    rt = type(res).from_json(res.to_json())
+    assert rt.spec.telemetry == ("queue",)
+    np.testing.assert_array_equal(rt.stats["hesrpt"]["tel_queue_max"],
+                                  res.stats["hesrpt"]["tel_queue_max"])

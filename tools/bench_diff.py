@@ -14,8 +14,13 @@ when
   backend, so drift means the simulator's outputs changed, not the machine).
 
 Spec hashing is canonical: falsy entries are dropped before hashing so a
-baseline written before a spec field existed (e.g. ``fused``) still matches
-a new record carrying the field at its default.  Baseline records with no
+baseline written before a spec field existed (e.g. ``fused`` or
+``telemetry``) still matches a new record carrying the field at its
+default.  Provenance stamps (``schema_version`` at the artifact top level,
+a per-record ``provenance`` dict with git SHA / jax versions / UTC
+timestamp — schema v2) are ignored for matching, so pre-v2 baselines
+without them parse and gate exactly as before; a schema-version mismatch
+between the two files is surfaced as a note.  Baseline records with no
 counterpart are reported as lost coverage (warning, not failure — sections
 come and go); new records with no baseline are simply new.
 
@@ -147,9 +152,17 @@ def diff(base_records: list[dict], new_records: list[dict], *,
     return failures, notes
 
 
-def _load(path: str) -> list[dict]:
+def _load(path: str) -> tuple[list[dict], int | None]:
+    """Read an artifact, tolerating every vintage of the format: a bare
+    record list (pre-``records``-key), an unstamped ``{"records": [...]}``
+    (schema v1, implicit), and the stamped v2+ form.  Returns
+    ``(records, schema_version)`` with ``None`` for unstamped files."""
     with open(path) as f:
-        return json.load(f).get("records", [])
+        doc = json.load(f)
+    if isinstance(doc, list):
+        return doc, None
+    version = doc.get("schema_version")
+    return doc.get("records", []), int(version) if version is not None else None
 
 
 def main(argv: list[str]) -> int:
@@ -173,7 +186,14 @@ def main(argv: list[str]) -> int:
         print("usage: python -m tools.bench_diff BASELINE NEW "
               "[--max-time-ratio R] [--min-wall S] [--rtol R] [--atol A]")
         return 2
-    failures, notes = diff(_load(argv[0]), _load(argv[1]), **kw)
+    base_records, base_schema = _load(argv[0])
+    new_records, new_schema = _load(argv[1])
+    failures, notes = diff(base_records, new_records, **kw)
+    if base_schema != new_schema:
+        notes.append(
+            f"schema_version: baseline={base_schema!r} new={new_schema!r} "
+            "(records matched on spec, stamps ignored)"
+        )
     for line in notes:
         print(f"  note: {line}")
     for line in failures:
