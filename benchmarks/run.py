@@ -109,6 +109,15 @@ def main() -> None:
     text, _ = telemetry.main(quick=quick, smoke=smoke)
     print(text)
 
+    _section("Beyond paper — bounded-slot streaming engine: horizon scaling, "
+             "load ladder, oracle " + ("(smoke)" if smoke else
+                                       "(quick)" if quick else
+                                       "(64k events, 1000 jobs x 10 seeds)"))
+    from benchmarks import streaming
+
+    text, _ = streaming.main(quick=quick, smoke=smoke)
+    print(text)
+
     _section("Beyond paper — scan-body profile: sort counts + fused allocate "
              + ("(smoke)" if smoke else "(M=4096 components, M=1024 scan)"))
     from benchmarks import profile_engine

@@ -1,0 +1,340 @@
+"""Beyond paper: the bounded-slot streaming engine at heavy traffic.
+
+Three read-outs, each landing as a row in the ``BENCH_sweeps.json``
+trajectory:
+
+- **Horizon scaling** (:func:`horizon_scaling`): wall time and XLA
+  temp-buffer footprint of :func:`repro.core.engine.run_stream_source`
+  as the event budget grows at fixed ``n_slots``, next to the
+  finite-tape :func:`repro.core.engine.run` on an equivalent tape.  The
+  streaming engine's per-event cost and memory must stay flat in the
+  horizon (the O(n_slots) claim); the tape engine's footprint grows with
+  the job count.
+- **load -> 1 ladder** (:func:`load_ladder`): a streaming ``Sweep`` over
+  arrival rates climbing into saturation — windowed mean flow/slowdown
+  per policy, the heavy-traffic regime the finite-tape sweeps cannot
+  reach without O(horizon) memory.
+- **Oracle cross-check** (:func:`oracle_check`): windowed engine
+  aggregates under slot *recycling* (``n_slots`` far below the job
+  count) against the per-event Python ``ClusterScheduler`` reference on
+  the same tape, windowed identically host-side.
+
+``python -m benchmarks.streaming [--quick|--smoke]``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _temp_bytes(compiled) -> int:
+    """XLA temp-buffer size of a compiled executable, or -1 if the
+    backend does not expose a memory analysis (the scaling row then
+    documents wall time only)."""
+    try:
+        return int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:
+        return -1
+
+
+def horizon_scaling(
+    horizons=(1_000, 4_000, 16_000),
+    *,
+    n_slots: int = 32,
+    rate: float = 4.0,
+    p: float = 0.5,
+    n_servers: float = 4.0,
+    repeats: int = 3,
+    log: bool = True,
+):
+    """Time + size the streaming scan per horizon; returns a SweepResult.
+
+    ``stats["hesrpt"]`` rows are indexed by horizon (event budget):
+    ``stream_us_per_event`` is ``[len(horizons), repeats]``;
+    ``stream_temp_bytes``, ``tape_us_per_event``, ``tape_temp_bytes``
+    and ``stream_completed`` are ``[len(horizons), 1]``.  The tape
+    comparator runs :func:`repro.core.engine.run` on a ``horizon / 2``-job
+    trace (a horizon of E events completes ~E/2 jobs), so the two
+    columns face the same workload.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.arrivals import stream_trace
+    from repro.core import engine
+    from repro.core.policies import make_policy
+    from repro.core.sweeps import RUN_LOG, SweepResult
+
+    dtype = jnp.result_type(float)
+    pol = make_policy("hesrpt")
+    rule = engine.continuous_rule(pol, n_servers, dtype=dtype)
+
+    rows = len(horizons)
+    stream_us = np.zeros((rows, repeats))
+    stream_bytes = np.zeros((rows, 1))
+    tape_us = np.zeros((rows, repeats))
+    tape_bytes = np.zeros((rows, 1))
+    completed = np.zeros((rows, 1))
+    t_start = time.perf_counter()
+    compile_s = 0.0
+
+    for hi, E in enumerate(horizons):
+        def stream_fn(key, E=E):
+            src = engine.poisson_source(key, rate, dtype=dtype)
+            res = engine.run_stream_source(
+                src, p, rule, n_slots=n_slots, n_events=E,
+                n_alone=n_servers,
+            )
+            return res.n_completed, res.occupancy_max
+
+        key = jax.random.PRNGKey(hi)
+        t0 = time.perf_counter()
+        c_stream = jax.jit(stream_fn).lower(key).compile()
+        n_done, _ = jax.block_until_ready(c_stream(key))
+        compile_s += time.perf_counter() - t0
+        completed[hi, 0] = int(n_done)
+        stream_bytes[hi, 0] = _temp_bytes(c_stream)
+        for r in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(c_stream(key))
+            stream_us[hi, r] = (time.perf_counter() - t0) * 1e6 / E
+
+        # The finite-tape engine on the matching workload: E/2 jobs on a
+        # materialized trace, horizon E — same event count, O(jobs) state.
+        n_jobs = max(E // 2, 2)
+        arr_np, x_np = stream_trace(n_jobs, rate, seed=hi)
+        x0 = jnp.asarray(x_np, dtype)
+        arr = jnp.asarray(arr_np, dtype)
+
+        def tape_fn(x0, arr, E=E):
+            return engine.run(x0, arr, p, rule, horizon=E).completion_times
+
+        t0 = time.perf_counter()
+        c_tape = jax.jit(tape_fn).lower(x0, arr).compile()
+        jax.block_until_ready(c_tape(x0, arr))
+        compile_s += time.perf_counter() - t0
+        tape_bytes[hi, 0] = _temp_bytes(c_tape)
+        for r in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(c_tape(x0, arr))
+            tape_us[hi, r] = (time.perf_counter() - t0) * 1e6 / E
+
+    result = SweepResult(
+        spec={
+            "kind": "streaming_horizon",
+            "horizons": list(horizons),
+            "n_slots": n_slots,
+            "rate": rate,
+            "p": p,
+            "n_servers": n_servers,
+            "repeats": repeats,
+            "policy": "hesrpt",
+        },
+        stats={
+            "hesrpt": {
+                "stream_us_per_event": stream_us,
+                "stream_temp_bytes": stream_bytes,
+                "tape_us_per_event": tape_us,
+                "tape_temp_bytes": tape_bytes,
+                "stream_completed": completed,
+            }
+        },
+        wall_s=time.perf_counter() - t_start,
+        compile_s=compile_s,
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        chunk_seeds=None,
+        sharded=False,
+    )
+    if log:
+        RUN_LOG.append(result.record())
+    return result
+
+
+def load_ladder(
+    rates=(1.0, 2.0, 4.0, 8.0),
+    *,
+    policies=("hesrpt", "srpt", "equi"),
+    n_jobs: int = 1000,
+    n_seeds: int = 10,
+    n_slots: int = 64,
+    p: float = 0.5,
+    log: bool = True,
+):
+    """Streaming sweep up the load ladder; windowed flow/slowdown rows."""
+    from repro.core.sweeps import Sweep, run_sweep
+
+    spec = Sweep.create(
+        policies, rates, n_jobs=n_jobs, n_seeds=n_seeds, p=p,
+        stream={"n_slots": n_slots},
+        metrics=("stream_flow", "stream_slowdown", "stream_blocked",
+                 "stream_occupancy"),
+    )
+    return run_sweep(spec, log=log)
+
+
+def oracle_check(
+    *,
+    n_jobs: int = 120,
+    n_slots: int = 24,
+    rate: float = 2.0,
+    p: float = 0.5,
+    n_chips: int = 64,
+    seed: int = 0,
+) -> float:
+    """Max relative windowed-mean-flow error, engine vs Python oracle.
+
+    The engine recycles ``n_slots`` slots over an ``n_jobs``-deep tape;
+    the :func:`benchmarks.arrivals.run_stream_reference` oracle replays
+    the same tape per event on ``n_chips`` whole chips.  Both are
+    windowed to the same stationary span host-side (jobs by arrival
+    time), so the comparison covers admission deferral, recycling and
+    the windowed accounting at once.  Also checks the continuous rule
+    against the ``quantize=False`` oracle.
+    """
+    import jax.numpy as jnp
+
+    from benchmarks.arrivals import run_stream_reference, stream_trace
+    from repro.core import engine
+    from repro.core.policies import make_policy
+
+    arr_np, x_np = stream_trace(n_jobs, rate, seed)
+    span = float(arr_np[-1])
+    window = (0.1 * span, 0.9 * span)
+    in_w = (arr_np >= window[0]) & (arr_np < window[1])
+    dtype = jnp.result_type(float)
+    pol = make_policy("hesrpt", n_servers=n_chips)
+    worst = 0.0
+    for quantize in (False, True):
+        rule = (
+            engine.quantized_rule(pol, n_chips, dtype=dtype)
+            if quantize
+            else engine.continuous_rule(pol, n_chips, dtype=dtype)
+        )
+        res = engine.run_stream(
+            jnp.asarray(x_np, dtype), jnp.asarray(arr_np, dtype), p, rule,
+            n_slots=n_slots, window=window, n_alone=n_chips,
+        )
+        flows = run_stream_reference(
+            "hesrpt", arr_np, x_np, p=p, n_chips=n_chips, quantize=quantize,
+        )
+        ref = float(np.mean(flows[in_w]))
+        got = float(res.mean_flow)
+        worst = max(worst, abs(got - ref) / ref)
+        assert int(res.n_window) == int(in_w.sum()), (
+            "windowed completion count disagrees with the oracle tape"
+        )
+    return worst
+
+
+def long_horizon(
+    *,
+    n_slots: int = 32,
+    jobs_factor: int = 50,
+    rate: float = 4.0,
+    p: float = 0.5,
+    n_servers: float = 4.0,
+):
+    """Slot-recycled run with >= ``jobs_factor`` x more jobs than slots.
+
+    Returns ``(n_completed, occupancy_max, blocked_steps, temp_bytes)``
+    from a single :func:`run_stream_source` scan whose event budget
+    admits ``jobs_factor * n_slots`` jobs through the fixed pool — the
+    acceptance run showing the engine is flat in the horizon.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+    from repro.core.policies import make_policy
+
+    dtype = jnp.result_type(float)
+    rule = engine.continuous_rule(make_policy("hesrpt"), n_servers, dtype=dtype)
+    n_events = int(2.4 * jobs_factor * n_slots)
+
+    def fn(key):
+        src = engine.poisson_source(key, rate, dtype=dtype)
+        res = engine.run_stream_source(
+            src, p, rule, n_slots=n_slots, n_events=n_events,
+            n_alone=n_servers,
+        )
+        return res.n_completed, res.occupancy_max, res.blocked_steps
+
+    key = jax.random.PRNGKey(7)
+    compiled = jax.jit(fn).lower(key).compile()
+    done, occ, blocked = jax.block_until_ready(compiled(key))
+    assert int(done) >= jobs_factor * n_slots, (
+        f"long-horizon run completed {int(done)} jobs, wanted "
+        f">= {jobs_factor * n_slots}"
+    )
+    assert int(occ) <= n_slots, "occupancy exceeded the slot pool"
+    return int(done), int(occ), int(blocked), _temp_bytes(compiled)
+
+
+def main(quick: bool = False, smoke: bool = False):
+    if smoke:
+        horizons, repeats = (200, 800), 2
+        rates, n_jobs, n_seeds, n_slots = (2.0, 8.0), 120, 2, 16
+        oc_jobs, oc_slots = 60, 12
+        lh_slots, lh_factor = 8, 50
+    elif quick:
+        horizons, repeats = (1_000, 4_000), 3
+        rates, n_jobs, n_seeds, n_slots = (1.0, 4.0, 8.0), 400, 4, 32
+        oc_jobs, oc_slots = 100, 20
+        lh_slots, lh_factor = 16, 50
+    else:
+        horizons, repeats = (1_000, 4_000, 16_000, 64_000), 3
+        rates, n_jobs, n_seeds, n_slots = (1.0, 2.0, 4.0, 8.0), 1000, 10, 64
+        oc_jobs, oc_slots = 120, 24
+        lh_slots, lh_factor = 32, 50
+
+    lines = []
+    hs = horizon_scaling(horizons, repeats=repeats)
+    st = hs.stats["hesrpt"]
+    lines.append(f"{'events':>8s} {'stream us/ev':>13s} {'tape us/ev':>11s} "
+                 f"{'stream temp B':>13s} {'tape temp B':>12s} {'done':>6s}")
+    for hi, E in enumerate(hs.spec["horizons"]):
+        lines.append(
+            f"{E:8d} {st['stream_us_per_event'][hi].mean():13.2f} "
+            f"{st['tape_us_per_event'][hi].mean():11.2f} "
+            f"{int(st['stream_temp_bytes'][hi, 0]):13d} "
+            f"{int(st['tape_temp_bytes'][hi, 0]):12d} "
+            f"{int(st['stream_completed'][hi, 0]):6d}"
+        )
+
+    ll = load_ladder(rates, n_jobs=n_jobs, n_seeds=n_seeds, n_slots=n_slots)
+    lines.append(f"\nload ladder (n_slots={n_slots}, windowed means):")
+    lines.append(f"{'rate':>6s} " + " ".join(
+        f"{name:>10s}" for name in ll.spec.policies))
+    for ri, rate in enumerate(ll.spec.rates):
+        row = " ".join(
+            f"{ll.stats[name]['stream_flow'][ri].mean():10.4f}"
+            for name in ll.spec.policies
+        )
+        lines.append(f"{rate:6.2f} {row}")
+
+    worst = oracle_check(n_jobs=oc_jobs, n_slots=oc_slots)
+    lines.append(f"\noracle cross-check (slot-recycled, windowed): "
+                 f"max rel err {worst:.2e}")
+    assert worst < 1e-6, "streaming engine drifted from the per-event oracle"
+
+    done, occ, blocked, temp_b = long_horizon(
+        n_slots=lh_slots, jobs_factor=lh_factor)
+    lines.append(
+        f"long horizon: {done} jobs through {lh_slots} slots "
+        f"({done // lh_slots}x recycle), peak occupancy {occ}, "
+        f"{blocked} deferred admissions, temp {temp_b} B"
+    )
+    return "\n".join(lines), (hs, ll)
+
+
+if __name__ == "__main__":
+    import sys
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    text, _ = main(quick="--quick" in sys.argv, smoke="--smoke" in sys.argv)
+    print(text)

@@ -262,6 +262,54 @@ def simulate_scenario(
     return (out, res.telemetry) if telemetry is not None else out
 
 
+def simulate_stream(
+    scn: Scenario,
+    p,
+    n_servers,
+    policy: Policy,
+    *,
+    n_slots: int,
+    window=None,
+    n_chips: int | None = None,
+    min_chips: int = 1,
+    rel_tol: float = 1e-9,
+    horizon: int | None = None,
+    record_times: bool = False,
+    fused: bool = False,
+    telemetry=None,
+) -> engine.StreamResult:
+    """Run one drawn :class:`Scenario` through the bounded-slot engine.
+
+    The streaming counterpart of :func:`simulate_scenario`: the same
+    regime split (``n_chips`` = whole chips, else the continuous system
+    on ``n_servers``), but the event scan carries ``[n_slots]`` recycled
+    slots instead of ``[n_jobs]`` state, and the read-out is the
+    stationary-window :class:`~repro.core.engine.StreamResult` (windowed
+    mean flow/slowdown, occupancy, blocked-admission counters) rather
+    than per-job arrays.  Scenarios carrying per-job tape state —
+    estimation noise, classes, drift — raise in
+    :func:`~repro.core.scenarios.stream_tape`; they stay on the
+    finite-tape path.
+    """
+    from repro.core.scenarios import stream_tape
+
+    x0, arrival_times = stream_tape(scn)
+    dtype = jnp.result_type(jnp.asarray(x0).dtype, jnp.float32)
+    if n_chips is not None:
+        rule = engine.quantized_rule(
+            policy, n_chips, min_chips=min_chips, dtype=dtype
+        )
+        n_alone = n_chips
+    else:
+        rule = engine.continuous_rule(policy, n_servers, dtype=dtype)
+        n_alone = n_servers
+    return engine.run_stream(
+        x0, arrival_times, p, rule, n_slots=n_slots, window=window,
+        n_alone=n_alone, horizon=horizon, rel_tol=rel_tol,
+        record_times=record_times, fused=fused, telemetry=telemetry,
+    )
+
+
 # --------------------------------------------------------------- load sweeps
 def load_sweep(
     policies: Sequence[str],

@@ -350,6 +350,19 @@ def knee_rule(
     return as_stateful(rule)
 
 
+def _resolve_fused(rule, fused: bool):
+    """Swap in the rule's kernel-fused allocate when ``fused=True``."""
+    if not fused:
+        return rule
+    fused_rule = getattr(rule, "fused_variant", None)
+    if fused_rule is None:
+        raise ValueError(
+            "fused=True needs a rule with a fused_variant — built by "
+            "continuous_rule/quantized_rule over the heSRPT policy"
+        )
+    return fused_rule
+
+
 # ------------------------------------------------------------ the event scan
 def run(
     x0: jax.Array,
@@ -416,14 +429,7 @@ def run(
     free scan — trajectories stay bit-for-bit identical (tested against
     the golden pins).
     """
-    if fused:
-        fused_rule = getattr(rule, "fused_variant", None)
-        if fused_rule is None:
-            raise ValueError(
-                "fused=True needs a rule with a fused_variant — built by "
-                "continuous_rule/quantized_rule over the heSRPT policy"
-            )
-        rule = fused_rule
+    rule = _resolve_fused(rule, fused)
     x0 = jnp.asarray(x0)
     M = x0.shape[0]
     n_drift = 0 if p_drift is None else p_drift.times.shape[0]
@@ -641,6 +647,536 @@ def run_ranked(
     return jnp.zeros(M, dtype).at[order].set(times)
 
 
+# ----------------------------------------------------- bounded-slot streaming
+class StreamSource(NamedTuple):
+    """Pull-based arrival stream for the bounded-slot engine.
+
+    ``init()`` builds the carried stream state; ``peek(state)`` reads the
+    next arrival's ``(time, size)`` without consuming it (``time = inf``
+    once exhausted); ``advance(state)`` consumes it.  The peek/advance
+    split is what lets :func:`run_stream` defer an arrival for any number
+    of events while the slot pool is full and still admit it later — the
+    recorded arrival time stays the stream's true one, so blocked wait
+    counts toward flow time.
+    """
+
+    init: Callable[[], Any]
+    peek: Callable[[Any], tuple[jax.Array, jax.Array]]
+    advance: Callable[[Any], Any]
+
+
+def tape_source(x0_sorted: jax.Array, arrivals_sorted: jax.Array) -> StreamSource:
+    """A finite, arrival-sorted ``(sizes, times)`` tape as a StreamSource.
+
+    State is the next tape index; :func:`run_stream`'s admission counter
+    then equals the tape position, which is what lets it scatter
+    completion times back to jobs (``record_times=True``).
+    """
+    x0_sorted = jnp.asarray(x0_sorted)
+    arrivals_sorted = jnp.asarray(arrivals_sorted)
+    T = x0_sorted.shape[0]
+
+    def init():
+        return jnp.zeros((), jnp.int32)
+
+    def peek(i):
+        j = jnp.minimum(i, T - 1)
+        t_next = jnp.where(i < T, arrivals_sorted[j], jnp.inf)
+        return t_next, x0_sorted[j]
+
+    def advance(i):
+        return i + 1
+
+    return StreamSource(init=init, peek=peek, advance=advance)
+
+
+def poisson_source(key: jax.Array, rate, *, size_alpha: float = 1.5, dtype) -> StreamSource:
+    """A truly unbounded Poisson/Pareto arrival stream in O(1) state.
+
+    State is ``(key, t_next, x_next)`` — one PRNG key plus the peeked
+    arrival — so no tape is ever materialized: through
+    :func:`run_stream_source` the whole simulation is O(n_slots) memory
+    for any event budget.  Gaps are Exp(``rate``), sizes Pareto
+    (``size_alpha``, minimum 1) — the same laws the ``poisson`` scenario
+    samples, equal in distribution but not sample-path equal (the tape
+    sampler draws one batch from two keys; this stream splits a fresh key
+    per arrival).
+    """
+
+    def draw(k):
+        k_next, k_gap, k_size = jax.random.split(k, 3)
+        gap = jax.random.exponential(k_gap, dtype=dtype) / rate
+        size = jax.random.pareto(k_size, size_alpha, dtype=dtype)
+        return k_next, gap, size
+
+    def init():
+        k_next, gap, size = draw(key)
+        return (k_next, jnp.asarray(gap, dtype), jnp.asarray(size, dtype))
+
+    def peek(state):
+        _, t_next, x_next = state
+        return t_next, x_next
+
+    def advance(state):
+        k, t_next, _ = state
+        k_next, gap, size = draw(k)
+        return (k_next, t_next + gap, size)
+
+    return StreamSource(init=init, peek=peek, advance=advance)
+
+
+class StreamResult(NamedTuple):
+    """Read-out of a bounded-slot streaming run.
+
+    The ``w``-prefixed docs below mean the stationary window ``[lo, hi)``
+    (``window=None`` = the whole stream): flow/slowdown aggregates count
+    jobs that *arrived* inside the window and completed within the event
+    budget, so near a window's trailing edge long jobs are right-censored
+    exactly as a finite-horizon measurement would censor them — pick
+    windows (and budgets) that let the tail drain when that matters.
+    Slowdown compares against running alone on ``n_alone`` servers:
+    ``flow / (size / s(n_alone))``.
+    """
+
+    mean_flow: jax.Array  # windowed mean flow time
+    mean_slowdown: jax.Array  # windowed mean slowdown
+    n_window: jax.Array  # completions counted into the window
+    n_arrived_window: jax.Array  # admissions whose arrival fell in the window
+    flow_sum: jax.Array  # windowed flow-time sum
+    slow_sum: jax.Array  # windowed slowdown sum
+    n_admitted: jax.Array  # arrivals admitted to a slot
+    n_completed: jax.Array  # total departures
+    blocked_steps: jax.Array  # events where a full pool deferred an arrival
+    occupancy_max: jax.Array  # peak in-flight jobs (epoch-start census)
+    t_final: jax.Array  # clock at the end of the scan
+    x_final: jax.Array  # [n_slots] remaining sizes (0 = free slot)
+    completion_times: jax.Array | None  # [n_jobs] input order (record_times)
+    telemetry: Any  # TelemetryResult when a probe was attached
+
+
+def _window_bounds(window, dtype):
+    if window is None:
+        return jnp.asarray(-jnp.inf, dtype), jnp.asarray(jnp.inf, dtype)
+    lo, hi = window
+    return jnp.asarray(lo, dtype), jnp.asarray(hi, dtype)
+
+
+def _finalize_stream(acc, t_fin, x_fin, comp, tel, dtype) -> StreamResult:
+    n_w = jnp.maximum(acc["w_count"], 1).astype(dtype)
+    return StreamResult(
+        mean_flow=acc["w_flow"] / n_w,
+        mean_slowdown=acc["w_slow"] / n_w,
+        n_window=acc["w_count"],
+        n_arrived_window=acc["w_arrived"],
+        flow_sum=acc["w_flow"],
+        slow_sum=acc["w_slow"],
+        n_admitted=acc["n_admitted"],
+        n_completed=acc["n_completed"],
+        blocked_steps=acc["blocked"],
+        occupancy_max=acc["occ_max"],
+        t_final=t_fin,
+        x_final=x_fin,
+        completion_times=comp,
+        telemetry=tel,
+    )
+
+
+def _stream_scan(
+    source: StreamSource, p, srule: StatefulRule, *, n_slots: int,
+    n_events: int, w_lo, w_hi, alone_rate, tol, t0, dtype, n_times: int,
+    telemetry,
+):
+    """The bounded-slot event scan shared by the tape and source runners.
+
+    Carries only ``[n_slots]`` per-job state (remaining size, original
+    size, arrival time, job id) plus O(1) scalars, so memory and per-event
+    cost are flat in the number of jobs ever streamed.  Slot lifecycle:
+    a slot is *free* iff its remaining size is 0; an admitted arrival
+    claims the free slot with the smallest cyclic offset after a rotating
+    ring pointer and a completion simply zeroes its slot.  With
+    ``n_slots >= n_jobs`` the pointer never wraps, slot ``i`` is the
+    ``i``-th arrival, and every per-step quantity equals :func:`run`'s —
+    the bit-for-bit reduction the tests pin.  When the pool is full the
+    next arrival is *deferred* (the arrival leg of the event race drops
+    out) and admitted — at its true arrival time, so the wait counts
+    toward flow — on a later event once a departure frees a slot.
+    """
+    S = int(n_slots)
+    idx = jnp.arange(S)
+    zi = jnp.zeros((), jnp.int32)
+    acc0 = {
+        "n_admitted": zi, "n_completed": zi, "w_count": zi,
+        "w_arrived": zi, "blocked": zi, "occ_max": zi,
+        "w_flow": jnp.zeros((), dtype), "w_slow": jnp.zeros((), dtype),
+    }
+
+    def body(carry, _):
+        if telemetry is None:
+            slots, t, ptr, src, st, acc, times = carry
+        else:
+            slots, t, ptr, src, st, acc, times, tel = carry
+        x, sx0, sarr, sid = slots
+        active = x > 0  # free slots hold exactly 0, like completed jobs
+        x_act = jnp.where(active, x, 0.0)
+        alloc, rate = srule.allocate(st, x_act, p)
+        tt = jnp.where(active & (rate > 0), x / rate, jnp.inf)
+        dt_dep = jnp.min(tt)
+        t_next, x_next = source.peek(src)
+        dt_arr = jnp.maximum(t_next - t, 0.0)
+        free = ~active
+        has_free = jnp.any(free)
+        # A full pool defers the arrival: it drops out of the event race
+        # until a departure frees a slot.
+        eff_dt_arr = jnp.where(has_free, dt_arr, jnp.inf)
+        dt = jnp.minimum(dt_dep, eff_dt_arr)
+        any_event = jnp.isfinite(dt)
+        dt = jnp.where(any_event, dt, 0.0)
+        admit = any_event & has_free & (dt_arr <= dt_dep)
+        take_dep = any_event & (dt_dep <= eff_dt_arr)
+        blocked_now = jnp.isfinite(dt_dep) & ~has_free & (dt_arr < dt_dep)
+        # On-time admissions pin t to the exact arrival time (as in `run`);
+        # a deferred arrival is admitted at the later clock t.
+        t_new = jnp.where(admit, jnp.maximum(t_next, t), t + dt)
+        x_new = jnp.where(active, x - dt * rate, x)
+        departing = (idx == jnp.argmin(tt)) & active & take_dep
+        x_new = jnp.where(departing | (active & (x_new <= tol)), 0.0, x_new)
+        newly_done = active & (x_new == 0.0)
+        # Windowed flow/slowdown, vectorized: the tol clamp can finish
+        # several stragglers in one step.  sx0 init 1.0 keeps idle slots'
+        # (masked-out) slowdown read free of 0/0.
+        flow = t_new - sarr
+        slow = flow * alone_rate / sx0
+        done_w = newly_done & (sarr >= w_lo) & (sarr < w_hi)
+        if times is not None:
+            tix = jnp.where(newly_done, sid, n_times)
+            times = times.at[tix].set(t_new, mode="drop")
+        # Claim: the free slot at the smallest cyclic offset after the
+        # ring pointer (epoch-start free mask — the departing slot is
+        # claimable from the *next* event, matching the admit gate above).
+        offs = (idx - ptr) % S
+        cand = jnp.argmin(jnp.where(free, offs, S)).astype(jnp.int32)
+        claimed = admit & (idx == cand)
+        arr_id = acc["n_admitted"]
+        x_new = jnp.where(claimed, x_next, x_new)
+        acc_new = {
+            "n_admitted": arr_id + admit,
+            "n_completed": acc["n_completed"]
+            + jnp.sum(newly_done, dtype=jnp.int32),
+            "w_count": acc["w_count"] + jnp.sum(done_w, dtype=jnp.int32),
+            "w_arrived": acc["w_arrived"]
+            + (admit & (t_next >= w_lo) & (t_next < w_hi)),
+            "blocked": acc["blocked"] + blocked_now,
+            "occ_max": jnp.maximum(
+                acc["occ_max"], jnp.sum(active, dtype=jnp.int32)
+            ),
+            "w_flow": acc["w_flow"] + jnp.sum(jnp.where(done_w, flow, 0.0)),
+            "w_slow": acc["w_slow"] + jnp.sum(jnp.where(done_w, slow, 0.0)),
+        }
+        slots_new = (
+            x_new,
+            jnp.where(claimed, x_next, sx0),
+            jnp.where(claimed, t_next, sarr),
+            jnp.where(claimed, arr_id, sid),
+        )
+        ptr_new = jnp.where(admit, (cand + 1) % S, ptr)
+        src_adv = source.advance(src)
+        src_new = jax.tree.map(
+            lambda a, b: jnp.where(admit, a, b), src_adv, src
+        )
+        st_new = srule.observe(
+            st, Observation(alloc=alloc, rate=rate, dt=dt, active=active)
+        )
+        if telemetry is None:
+            carry = (slots_new, t_new, ptr_new, src_new, st_new, acc_new, times)
+            return carry, None
+        tel_new, tel_out = telemetry.step(
+            tel,
+            ProbeEvent(
+                t=t, dt=dt, alloc=alloc, rate=rate, active=active, x=x,
+                p=p, rule_state=st,
+            ),
+        )
+        carry = (
+            slots_new, t_new, ptr_new, src_new, st_new, acc_new, times, tel_new
+        )
+        return carry, tel_out
+
+    slots0 = (
+        jnp.zeros(S, dtype),  # remaining size: free slots hold 0
+        jnp.ones(S, dtype),  # original size (1.0: see slowdown note above)
+        jnp.zeros(S, dtype),  # arrival time
+        jnp.full(S, n_times, jnp.int32),  # job id (sentinel = never used)
+    )
+    times0 = jnp.full(n_times, jnp.inf, dtype) if n_times else None
+    init = (slots0, jnp.asarray(t0, dtype), zi, source.init(), srule.init(),
+            acc0, times0)
+    if telemetry is not None:
+        init = (*init, telemetry.init())
+    carry_fin, tel_ys = jax.lax.scan(body, init, None, length=n_events)
+    tel_result = None
+    if telemetry is not None:
+        tel_result = telemetry.finalize(carry_fin[7], tel_ys)
+    slots_fin, t_fin = carry_fin[0], carry_fin[1]
+    return slots_fin[0], t_fin, carry_fin[5], carry_fin[6], tel_result
+
+
+def run_stream(
+    x0: jax.Array,
+    arrival_times: jax.Array,
+    p,
+    rule: AllocRule | StatefulRule,
+    *,
+    n_slots: int,
+    window: tuple[Any, Any] | None = None,
+    n_alone=1.0,
+    horizon: int | None = None,
+    rel_tol: float = 1e-9,
+    t0=0.0,
+    record_times: bool = False,
+    fused: bool = False,
+    telemetry: Any = None,
+) -> StreamResult:
+    """:func:`run` over a fixed pool of ``n_slots`` recycled job slots.
+
+    Same event loop, same rules (stateful, fused, telemetry all compose),
+    but the scan carries ``[n_slots]`` state instead of ``[n_jobs]``: the
+    tape can be arbitrarily long while memory stays O(n_slots) and each
+    event pays O(n_slots log n_slots) in the rule's sort instead of
+    O(n_jobs log n_jobs).  At any stable load the in-flight population is
+    O(load), not O(horizon), so ``n_slots`` is a small constant — see
+    :func:`_stream_scan` for the slot lifecycle and the full-pool
+    (deferred-admission) semantics, and :func:`run_stream_source` for the
+    tape-free unbounded variant.
+
+    Reduction: with ``n_slots >= n_jobs`` the trajectory is value-
+    identical to :func:`run` on the same tape (tested bit-for-bit), with
+    two measure-zero caveats — exactly tied arrival times are admitted
+    one per event here (extra zero-length epochs; `run` batch-admits
+    them), and a departure epoch whose float rounding overshoots the next
+    arrival time admits that arrival one epoch later.
+
+    ``window=(lo, hi)`` selects the stationary measurement window (see
+    :class:`StreamResult`); ``record_times=True`` additionally scatters
+    per-job completion times (input order) through an ``[n_jobs]`` carry
+    — parity/debug tooling, not the O(n_slots) production path.  ``p``
+    must be a scalar: per-job exponents would have to ride in the slots
+    (future work), and ``p_drift``'s global regime clock belongs to the
+    finite-tape engine.
+    """
+    if jnp.ndim(p) != 0:
+        raise ValueError(
+            "run_stream needs a scalar p — per-job exponents do not ride "
+            "in slots yet; multi-class streams take the finite-tape run()"
+        )
+    rule = _resolve_fused(rule, fused)
+    x0 = jnp.asarray(x0)
+    T = x0.shape[0]
+    E = 2 * T if horizon is None else horizon
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arrival_times = jnp.asarray(arrival_times).astype(dtype)
+    tol = rel_tol * jnp.max(x0)
+    order = jnp.argsort(arrival_times)
+    source = tape_source(x0[order], arrival_times[order])
+    w_lo, w_hi = _window_bounds(window, dtype)
+    x_fin, t_fin, acc, times, tel = _stream_scan(
+        source, p, as_stateful(rule), n_slots=n_slots, n_events=E,
+        w_lo=w_lo, w_hi=w_hi, alone_rate=speedup(jnp.asarray(n_alone, dtype), p),
+        tol=tol, t0=jnp.asarray(t0, dtype), dtype=dtype,
+        n_times=T if record_times else 0, telemetry=telemetry,
+    )
+    comp = None
+    if record_times:
+        comp = jnp.zeros(T, dtype).at[order].set(times)
+    return _finalize_stream(acc, t_fin, x_fin, comp, tel, dtype)
+
+
+def run_stream_source(
+    source: StreamSource,
+    p,
+    rule: AllocRule | StatefulRule,
+    *,
+    n_slots: int,
+    n_events: int,
+    window: tuple[Any, Any] | None = None,
+    n_alone=1.0,
+    x_scale=1.0,
+    rel_tol: float = 1e-9,
+    t0=0.0,
+    dtype=jnp.float64,
+    fused: bool = False,
+    telemetry: Any = None,
+) -> StreamResult:
+    """:func:`run_stream` for an unbounded :class:`StreamSource`.
+
+    Runs exactly ``n_events`` scan steps against a generator source (e.g.
+    :func:`poisson_source`), so nothing anywhere is sized by a job count:
+    the millions-of-users regime in O(n_slots) memory.  The completion
+    tolerance is absolute — ``rel_tol * x_scale``, with ``x_scale`` the
+    caller's typical-size scale (there is no tape to take a max over).
+    Per-job completion times are not recorded (no finite job set to
+    scatter into); windowed aggregates and telemetry are the read-out.
+    """
+    if jnp.ndim(p) != 0:
+        raise ValueError(
+            "run_stream_source needs a scalar p — per-job exponents do "
+            "not ride in slots yet"
+        )
+    rule = _resolve_fused(rule, fused)
+    w_lo, w_hi = _window_bounds(window, dtype)
+    x_fin, t_fin, acc, _, tel = _stream_scan(
+        source, p, as_stateful(rule), n_slots=n_slots, n_events=n_events,
+        w_lo=w_lo, w_hi=w_hi,
+        alone_rate=speedup(jnp.asarray(n_alone, dtype), p),
+        tol=jnp.asarray(rel_tol * x_scale, dtype),
+        t0=jnp.asarray(t0, dtype), dtype=dtype, n_times=0,
+        telemetry=telemetry,
+    )
+    return _finalize_stream(acc, t_fin, x_fin, None, tel, dtype)
+
+
+def run_stream_ranked(
+    x0: jax.Array,
+    arrival_times: jax.Array,
+    p,
+    n_servers,
+    rank_policy,
+    *,
+    n_slots: int,
+    window: tuple[Any, Any] | None = None,
+    n_alone=1.0,
+    horizon: int | None = None,
+    t0=0.0,
+    record_times: bool = False,
+) -> StreamResult:
+    """:func:`run_ranked` over a fixed pool of recycled job slots.
+
+    The rank-space fast path and the bounded-slot refactor compose: ranks
+    live on slots (0 = free, which is also how :func:`run_ranked` marks
+    inactive jobs), a departure drops rank ``m``, an arrival inserts one
+    rank and claims a slot from the ring pointer.  Per-event cost is
+    O(n_slots) with no sort at all.  Admission, deferral and windowed
+    accounting follow :func:`run_stream` exactly (same reduction to
+    :func:`run_ranked` when ``n_slots >= n_jobs``, same blocked-arrival
+    semantics when smaller), so the two streaming paths agree the same
+    way the two finite-tape paths do.
+    """
+    if jnp.ndim(p) != 0:
+        raise ValueError("run_stream_ranked needs a scalar p (see run_ranked)")
+    x0 = jnp.asarray(x0)
+    T = x0.shape[0]
+    S = int(n_slots)
+    E = 2 * T if horizon is None else horizon
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arrival_times = jnp.asarray(arrival_times).astype(dtype)
+    order = jnp.argsort(arrival_times)
+    arr = arrival_times[order]
+    xs = x0[order]
+    idx = jnp.arange(S)
+    w_lo, w_hi = _window_bounds(window, dtype)
+    alone_rate = speedup(jnp.asarray(n_alone, dtype), p)
+    n_times = T if record_times else 0
+    zi = jnp.zeros((), jnp.int32)
+
+    def body(carry, _):
+        slots, ranks, m, t, i, ptr, acc, times = carry
+        x, sx0, sarr, sid = slots
+        theta = rank_policy(ranks, m, p, dtype=dtype)
+        rate = speedup(theta * n_servers, p)
+        small = jnp.argmax(ranks)
+        has_active = m > 0
+        x_s = x[small]
+        r_s = rate[small]
+        dt_dep = jnp.where(has_active & (r_s > 0), x_s / r_s, jnp.inf)
+        t_next = jnp.where(i < T, arr[jnp.minimum(i, T - 1)], jnp.inf)
+        dt_arr = jnp.maximum(t_next - t, 0.0)
+        has_free = m < S
+        eff_dt_arr = jnp.where(has_free, dt_arr, jnp.inf)
+        dt = jnp.minimum(dt_dep, eff_dt_arr)
+        any_event = jnp.isfinite(dt)
+        dt = jnp.where(any_event, dt, 0.0)
+        admit = any_event & has_free & (dt_arr <= dt_dep)
+        take_dep = any_event & (dt_dep <= eff_dt_arr)
+        blocked_now = jnp.isfinite(dt_dep) & ~has_free & (dt_arr < dt_dep)
+        t_new = jnp.where(admit, jnp.maximum(t_next, t), t + dt)
+        active = ranks > 0
+        x_new = jnp.where(active, jnp.maximum(x - dt * rate, 0.0), x)
+        departing = (idx == small) & active & take_dep
+        dep_real = take_dep & has_active
+        x_new = jnp.where(departing, 0.0, x_new)
+        # Windowed accounting on the single departer (rank m).
+        arr_s = sarr[small]
+        flow = t_new - arr_s
+        slow = flow * alone_rate / sx0[small]
+        cw = dep_real & (arr_s >= w_lo) & (arr_s < w_hi)
+        if times is not None:
+            tj = jnp.where(dep_real, sid[small], n_times)
+            times = times.at[tj].set(t_new, mode="drop")
+        ranks = jnp.where(departing, 0, ranks)
+        m_mid = m - jnp.where(dep_real, 1, 0)
+        # Arrival: claim a slot from the ring pointer (epoch-start free
+        # mask, as in _stream_scan) and insert its rank among the post-
+        # departure active set.  Every active job arrived earlier, so the
+        # arriving job loses exact-size ties — the same predicate as
+        # run_ranked's ``idx < i_c`` (see its tie-handling note).
+        free = ~active
+        offs = (idx - ptr) % S
+        cand = jnp.argmin(jnp.where(free, offs, S)).astype(jnp.int32)
+        x_a = xs[jnp.minimum(i, T - 1)]
+        still = ranks > 0
+        ahead = still & (x_new >= x_a)
+        r_a = 1 + jnp.sum(ahead, dtype=jnp.int32)
+        bumped = jnp.where(still & (ranks >= r_a), ranks + 1, ranks)
+        inserted = bumped.at[cand].set(r_a)
+        ranks = jnp.where(admit, inserted, ranks)
+        claimed = admit & (idx == cand)
+        slots_new = (
+            jnp.where(claimed, x_a, x_new),
+            jnp.where(claimed, x_a, sx0),
+            jnp.where(claimed, t_next, sarr),
+            jnp.where(claimed, i, sid),
+        )
+        acc_new = {
+            "n_admitted": acc["n_admitted"] + admit,
+            "n_completed": acc["n_completed"] + dep_real,
+            "w_count": acc["w_count"] + cw,
+            "w_arrived": acc["w_arrived"]
+            + (admit & (t_next >= w_lo) & (t_next < w_hi)),
+            "blocked": acc["blocked"] + blocked_now,
+            "occ_max": jnp.maximum(acc["occ_max"], m),
+            "w_flow": acc["w_flow"] + jnp.where(cw, flow, 0.0),
+            "w_slow": acc["w_slow"] + jnp.where(cw, slow, 0.0),
+        }
+        m_new = m_mid + jnp.where(admit, 1, 0)
+        i_new = i + jnp.where(admit, 1, 0)
+        ptr_new = jnp.where(admit, (cand + 1) % S, ptr)
+        return (slots_new, ranks, m_new, t_new, i_new, ptr_new, acc_new,
+                times), None
+
+    slots0 = (
+        jnp.zeros(S, dtype),
+        jnp.ones(S, dtype),
+        jnp.zeros(S, dtype),
+        jnp.full(S, n_times, jnp.int32),
+    )
+    acc0 = {
+        "n_admitted": zi, "n_completed": zi, "w_count": zi,
+        "w_arrived": zi, "blocked": zi, "occ_max": zi,
+        "w_flow": jnp.zeros((), dtype), "w_slow": jnp.zeros((), dtype),
+    }
+    times0 = jnp.full(n_times, jnp.inf, dtype) if record_times else None
+    init = (slots0, jnp.zeros(S, jnp.int32), zi, jnp.asarray(t0, dtype), zi,
+            zi, acc0, times0)
+    (slots_fin, _, _, t_fin, _, _, acc_fin, times_fin), _ = jax.lax.scan(
+        body, init, None, length=E
+    )
+    comp = None
+    if record_times:
+        comp = jnp.zeros(T, dtype).at[order].set(times_fin)
+    return _finalize_stream(acc_fin, t_fin, slots_fin[0], comp, None, dtype)
+
+
 # -------------------------------------------------- JAX-native quantization
 def quantize_allocation_jax(
     theta: jax.Array, n_chips: int, *, min_chips: int = 1
@@ -811,13 +1347,20 @@ __all__ = [
     "PDrift",
     "ProbeEvent",
     "StatefulRule",
+    "StreamResult",
+    "StreamSource",
     "as_stateful",
     "continuous_rule",
     "finish_alloc",
     "knee_rule",
+    "poisson_source",
     "quantize_allocation_jax",
     "quantized_rule",
     "run",
     "run_ranked",
+    "run_stream",
+    "run_stream_ranked",
+    "run_stream_source",
     "snap_to_slices_jax",
+    "tape_source",
 ]

@@ -275,6 +275,32 @@ def make_scenario(
     return sample
 
 
+def stream_tape(scn: Scenario) -> tuple[jax.Array, jax.Array]:
+    """Reduce a :class:`Scenario` to the plain ``(sizes, arrivals)`` tape
+    the bounded-slot engine (``engine.run_stream``) consumes.
+
+    The streaming scan carries per-job state in *recycled slots*, so
+    scenario features that attach per-job vectors to the whole tape have
+    nothing to ride in: estimation noise (``size_factors``/``p_hat``),
+    per-job class exponents (``p_job``) and drift schedules (``p_drift``)
+    all raise here rather than silently dropping their physics.  Those
+    regimes stay on the finite-tape ``engine.run`` path until per-slot
+    state recycling grows to carry them.
+    """
+    for field, why in (
+        ("size_factors", "estimation noise is per-job tape state"),
+        ("p_hat", "estimation noise is per-job tape state"),
+        ("p_job", "per-job class exponents do not ride in slots yet"),
+        ("p_drift", "the drift clock belongs to the finite-tape engine"),
+    ):
+        if getattr(scn, field) is not None:
+            raise ValueError(
+                f"scenario with {field} cannot stream: {why} "
+                "(use the finite-tape engine.run path)"
+            )
+    return scn.x0, scn.arrival_times
+
+
 def trace_scenario(arrival_times, sizes) -> ScenarioSampler:
     """Replay externally supplied arrivals/sizes (key and rate are ignored)."""
     x0 = jnp.asarray(sizes)
@@ -298,5 +324,6 @@ __all__ = [
     "make_scenario",
     "pareto_sizes",
     "poisson_arrivals",
+    "stream_tape",
     "trace_scenario",
 ]

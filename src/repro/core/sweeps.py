@@ -55,6 +55,8 @@ import numpy as np
 __all__ = [
     "RUN_LOG",
     "SCHEMA_VERSION",
+    "STREAM_KEYS",
+    "STREAM_METRICS",
     "Sweep",
     "SweepResult",
     "bench_records",
@@ -75,6 +77,25 @@ CLASS_METRICS = {
     "class_flowtime": "flow_times",
     "class_slowdown": "slowdowns",
 }
+
+#: Streaming-regime metrics (``Sweep.create(stream=...)``): per-cell scalar
+#: read-outs of ``engine.StreamResult`` — stationary-window aggregates from
+#: the bounded-slot scan, not per-job reductions (there is no per-job array
+#: to reduce; that is the point of the regime).
+STREAM_METRICS = {
+    "stream_flow": "mean_flow",
+    "stream_slowdown": "mean_slowdown",
+    "stream_completed": "n_window",
+    "stream_arrived": "n_arrived_window",
+    "stream_blocked": "blocked_steps",
+    "stream_occupancy": "occupancy_max",
+}
+
+#: ``Sweep.create(stream=...)`` config keys: the slot-pool size and the
+#: stationary window as fractions of the tape's nominal span ``n_jobs/rate``
+#: (arrivals inside ``[warmup_frac, end_frac] * span`` are measured, so the
+#: warm-up ramp and the drain tail are both discarded).
+STREAM_KEYS = ("n_slots", "warmup_frac", "end_frac")
 
 #: Estimation-regime arms (see ``benchmarks/estimation.py``): how the policy
 #: learns the speedup exponent on a p-drift scenario.
@@ -159,6 +180,7 @@ class Sweep(NamedTuple):
     arm_kw: tuple = ()  # e.g. (("discount", 0.9), ("prior_weight", 1.0))
     fused: bool = False  # kernels/alloc.py fused allocate (quantized heSRPT)
     telemetry: tuple[str, ...] = ()  # in-scan probe metrics -> tel_* columns
+    stream: tuple = ()  # bounded-slot regime: (("n_slots", S), ...) kv pairs
 
     @classmethod
     def create(
@@ -183,23 +205,64 @@ class Sweep(NamedTuple):
         arm_kw: dict | tuple | None = None,
         fused: bool = False,
         telemetry=(),
+        stream: dict | tuple | None = None,
     ) -> "Sweep":
         from repro.core.arrivals import OnlineSimResult
         from repro.core.multiclass import as_specs
+        from repro.core.scenarios import _any_pos
         from repro.core.telemetry import DEFAULT_METRICS, METRICS
 
         if classes is not None:
             classes = as_specs(classes)
+        stream = _hashable(stream or {})
+        if stream:
+            skw = dict(stream)
+            unknown_keys = tuple(k for k in skw if k not in STREAM_KEYS)
+            if unknown_keys:
+                raise ValueError(
+                    f"unknown stream key(s) {unknown_keys}; known: {STREAM_KEYS}"
+                )
+            if "n_slots" not in skw or int(skw["n_slots"]) < 1:
+                raise ValueError("stream needs n_slots >= 1 (the slot pool)")
+            warm = float(skw.get("warmup_frac", 0.1))
+            end = float(skw.get("end_frac", 0.9))
+            if not 0.0 <= warm < end:
+                raise ValueError(
+                    "stream window needs 0 <= warmup_frac < end_frac "
+                    f"(got {warm} / {end})"
+                )
+            if classes is not None or arm is not None:
+                raise ValueError(
+                    "streaming sweeps are single-class and arm-free — "
+                    "per-job class/estimator state does not ride in slots"
+                )
+            skw_scn = dict(_hashable(scenario_kw or {}))
+            if scenario.startswith(("drift_", "multiclass_")) or _any_pos(
+                skw_scn.get("sigma_size", 0.0)
+            ) or _any_pos(skw_scn.get("sigma_p", 0.0)):
+                raise ValueError(
+                    "streaming sweeps need a plain tape scenario (no drift, "
+                    "classes or estimation noise — see scenarios.stream_tape)"
+                )
         if metrics is None:
-            metrics = (
-                ("mean_flowtime", "mean_slowdown", "class_flowtime",
-                 "class_slowdown")
-                if classes is not None
-                else ("mean_flowtime",)
-            )
+            if stream:
+                metrics = ("stream_flow", "stream_slowdown")
+            elif classes is not None:
+                metrics = ("mean_flowtime", "mean_slowdown", "class_flowtime",
+                           "class_slowdown")
+            else:
+                metrics = ("mean_flowtime",)
         metrics = tuple(metrics)
         for m in metrics:
-            if m in CLASS_METRICS:
+            if stream:
+                if m not in STREAM_METRICS:
+                    raise ValueError(
+                        f"metric {m!r} is not a streaming metric; streaming "
+                        f"sweeps read {tuple(STREAM_METRICS)}"
+                    )
+            elif m in STREAM_METRICS:
+                raise ValueError(f"metric {m!r} needs a streaming sweep (stream=)")
+            elif m in CLASS_METRICS:
                 if classes is None:
                     raise ValueError(f"metric {m!r} needs a multi-class sweep")
             elif m not in OnlineSimResult._fields:
@@ -278,6 +341,7 @@ class Sweep(NamedTuple):
             arm_kw=_hashable(arm_kw or {}),
             fused=bool(fused),
             telemetry=telemetry,
+            stream=stream,
         )
 
     def jobs_per_seed(self) -> int:
@@ -309,7 +373,7 @@ def _cell_fn(spec: Sweep, name: str):
     kw = dict(spec.scenario_kw)
 
     tel_probe = None
-    if spec.telemetry:
+    if spec.telemetry and not spec.stream:
         # O(1) streaming aggregates in the scan carry — the per-cell
         # scalar columns (tel_*_mean / tel_*_max) cost no per-event
         # memory, so telemetry rides along at any sweep scale.
@@ -349,6 +413,78 @@ def _cell_fn(spec: Sweep, name: str):
             else:
                 out.append(getattr(res, m))
         return tuple(out)
+
+    if spec.stream:
+        # Bounded-slot regime: same sampler, but the cell runs the O(n_slots)
+        # streaming engine and reads stationary-window aggregates instead of
+        # whole-tape means.  The window is a fixed fraction of the expected
+        # tape span so every (rate, seed) cell discards the same share of
+        # warm-up and tail truncation.
+        from repro.core import engine
+        from repro.core.arrivals import simulate_stream
+        from repro.core.policies import make_policy, make_rank_policy
+        from repro.core.scenarios import stream_tape
+
+        sampler = make_scenario(
+            spec.scenario, size_alpha=spec.size_alpha, p=spec.p, **kw
+        )
+        skw = dict(spec.stream)
+        n_slots = int(skw["n_slots"])
+        warm = float(skw.get("warmup_frac", 0.1))
+        end = float(skw.get("end_frac", 0.9))
+        dtype = jnp.result_type(float)
+        # Carried-rank fast path under the same conditions as the finite-tape
+        # branch below (telemetry probes need the generic scan's ProbeEvent).
+        rank_pol = (
+            make_rank_policy(name)
+            if spec.n_chips is None and not spec.telemetry and not spec.fused
+            else None
+        )
+        pol = make_policy(
+            name,
+            n_servers=(
+                spec.n_chips if spec.n_chips is not None else spec.n_servers
+            ),
+        )
+
+        def one(key, rate):
+            scn = sampler(key, spec.n_jobs, rate)
+            span = spec.n_jobs / rate  # expected arrival span at this rate
+            window = (warm * span, end * span)
+            probe = None
+            if spec.telemetry:
+                from repro.core.telemetry import make_probe
+
+                probe = make_probe(
+                    spec.telemetry,
+                    mode="stream",
+                    alloc_unit=float(spec.n_chips) if spec.n_chips else 1.0,
+                    n_jobs=n_slots,
+                    window=window,
+                    dtype=dtype,
+                )
+            if rank_pol is not None:
+                x0, arr = stream_tape(scn)
+                res = engine.run_stream_ranked(
+                    x0, arr, spec.p, spec.n_servers, rank_pol,
+                    n_slots=n_slots, window=window, n_alone=spec.n_servers,
+                )
+            else:
+                res = simulate_stream(
+                    scn, spec.p, spec.n_servers, pol, n_slots=n_slots,
+                    window=window, n_chips=spec.n_chips,
+                    min_chips=spec.min_chips, fused=spec.fused,
+                    telemetry=probe,
+                )
+            out = tuple(
+                jnp.asarray(getattr(res, STREAM_METRICS[m]), dtype)
+                for m in spec.metrics
+            )
+            if probe is not None:
+                return out + tel_values(res.telemetry)
+            return out
+
+        return one
 
     if spec.classes is not None:
         from repro.core.multiclass import simulate_multiclass
@@ -641,6 +777,7 @@ class SweepResult(NamedTuple):
         d = self.spec._asdict()
         d["scenario_kw"] = [list(kv) for kv in self.spec.scenario_kw]
         d["arm_kw"] = [list(kv) for kv in self.spec.arm_kw]
+        d["stream"] = [list(kv) for kv in self.spec.stream]
         if self.spec.classes is not None:
             d["classes"] = [list(c) for c in self.spec.classes]
         d["policies"] = list(self.spec.policies)
@@ -724,6 +861,7 @@ class SweepResult(NamedTuple):
             arm_kw=dict((k, _hashable(v)) for k, v in s["arm_kw"]),
             fused=s.get("fused", False),
             telemetry=s.get("telemetry", ()),
+            stream=dict((k, _hashable(v)) for k, v in s.get("stream", [])),
         )
         stats = {
             name: {m: np.asarray(v, dtype=np.float64) for m, v in by_m.items()}

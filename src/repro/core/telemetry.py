@@ -44,6 +44,7 @@ unchanged — golden pins hold either way.
 
 from __future__ import annotations
 
+import math
 from collections.abc import Callable
 from typing import Any, NamedTuple
 
@@ -189,7 +190,9 @@ def default_hist_ranges(n_jobs: int) -> dict[str, tuple[float, float]]:
         "efficiency": (0.0, float(m) ** 0.5),
         "utilization": (0.0, 1.0),
         "queue": (0.0, float(m)),
-        "entropy": (0.0, float(jnp.log(jnp.asarray(float(max(m, 2)))))),
+        # math.log, not jnp.log: this must stay a Python float so probes can
+        # be built inside a jitted cell (a staged constant is not float()-able)
+        "entropy": (0.0, math.log(max(m, 2))),
         "p_hat_err": (0.0, 1.0),
     }
 
@@ -203,6 +206,7 @@ def make_probe(
     hist_bins: int = 32,
     hist_ranges: dict[str, tuple[float, float]] | None = None,
     p_hat_reader: Callable | None = None,
+    window: tuple[Any, Any] | None = None,
     dtype=jnp.float64,
 ) -> Probe:
     """Build a :class:`Probe` for ``engine.run(telemetry=)``.
@@ -215,10 +219,23 @@ def make_probe(
     supports; override any of them with ``hist_ranges``).  ``dtype`` is
     the accumulator dtype — match the engine's (f64 under the benchmark
     x64 flag) so time weights don't lose precision against it.
+
+    ``window=(lo, hi)`` (stream mode; values may be traced scalars)
+    restricts every time weight to the stationary window: each epoch
+    contributes ``|[t, t+dt) ∩ [lo, hi)|`` instead of ``dt``, so means,
+    maxima and histogram mass describe the windowed span only — the
+    warm-up (and drain) transients of a streaming run are discarded
+    without a second pass.  An epoch *straddling* an edge contributes
+    exactly its overlap.  ``window=None`` is byte-identical to the
+    pre-window probe (the branch resolves at trace time).
     """
     metrics = tuple(metrics)
     if mode not in ("series", "stream"):
         raise ValueError(f"mode must be 'series' or 'stream', not {mode!r}")
+    if window is not None and mode != "stream":
+        raise ValueError(
+            "window= is stream-mode only (a series is windowed host-side)"
+        )
     fns = _metric_fns(metrics, float(alloc_unit), p_hat_reader)
 
     if mode == "series":
@@ -256,8 +273,19 @@ def make_probe(
             }
         return state
 
+    if window is not None:
+        w_lo, w_hi = window
+        w_lo = jnp.asarray(w_lo, dtype)
+        w_hi = jnp.asarray(w_hi, dtype)
+
     def step_stream(state, ev: ProbeEvent):
         dt = ev.dt.astype(dtype)
+        if window is not None:  # overlap of [t, t+dt) with the window
+            t_ev = ev.t.astype(dtype)
+            dt = jnp.clip(
+                jnp.minimum(t_ev + dt, w_hi) - jnp.maximum(t_ev, w_lo),
+                0.0, None,
+            )
         live = dt > 0  # no-op tail epochs and zero-length arrival batches
         new: dict[str, Any] = {"t_sum": state["t_sum"] + dt}
         for m in metrics:

@@ -30,15 +30,11 @@ SAMPLE = Path(__file__).parent.parent / "examples" / "sample_schedule_trace.json
 
 
 @pytest.fixture(scope="module", autouse=True)
-def _fresh_compile_cache():
-    # This file runs last in the suite, after a few hundred distinct XLA
-    # programs have been compiled in-process; at that point jaxlib 0.4.x's
-    # CPU backend segfaults inside backend_compile on the next large scan
-    # (reproducibly, and only then — the same compile is fine standalone
-    # or after either half of the suite, with >100 GB free).  Dropping the
-    # executable cache releases the accumulated JIT state and keeps the
-    # compile below whatever threshold it trips.
-    jax.clear_caches()
+def _fresh_compile_cache(fresh_compile_cache):
+    # This file runs near the end of the suite and compiles large recorded
+    # scans — see the shared ``fresh_compile_cache`` fixture in conftest.py
+    # for the jaxlib 0.4.x CPU-backend rationale; autouse it here.
+    pass
 
 
 def _recorded(kind, seed=0, rate=2.0, n_jobs=N_JOBS, p=0.5):

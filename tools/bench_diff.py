@@ -12,6 +12,15 @@ when
 - any per-cell metric *mean* drifted beyond ``--rtol``/``--atol`` for
   ``kind == "sweep"`` records (sweeps are seeded and deterministic per
   backend, so drift means the simulator's outputs changed, not the machine).
+  A drift failure prints a per-cell regression table (policy, metric, cell
+  index, baseline vs new mean, relative error) covering *every*
+  out-of-tolerance cell, so one CI run shows the full shape of a
+  regression instead of its first symptom.
+
+Streaming-lane records participate like any other: a streaming sweep's
+``stream`` config (slot-pool size, window fractions) is part of the spec
+hash, so ladders at different ``n_slots``/windows are distinct lanes, and
+record labels carry ``slots=``/``w=[...]`` so reports are tellable apart.
 
 Spec hashing is canonical: falsy entries are dropped before hashing so a
 baseline written before a spec field existed (e.g. ``fused`` or
@@ -66,6 +75,15 @@ def _label(rec: dict) -> str:
         bits.append(str(spec["arm"]))
     if spec.get("classes"):
         bits.append(f"K={len(spec['classes'])}")
+    if spec.get("stream"):  # streaming sweep: label carries the slot/window
+        skw = dict(spec["stream"])  # config so lanes are tellable apart
+        bits.append(f"slots={skw.get('n_slots')}")
+        if "warmup_frac" in skw or "end_frac" in skw:
+            bits.append(
+                f"w=[{skw.get('warmup_frac', 0.1)},{skw.get('end_frac', 0.9)}]"
+            )
+    if spec.get("n_slots"):  # dict-spec streaming rows (horizon scaling)
+        bits.append(f"slots={spec['n_slots']}")
     bits.append(rec.get("backend", "?"))
     return " ".join(bits)
 
@@ -78,27 +96,46 @@ def _index(records: list[dict]) -> dict[str, dict]:
 
 
 def _metric_drifts(base: dict, new: dict, rtol: float, atol: float):
-    """Mean drifts between two matched ``kind=="sweep"`` records."""
+    """Every drifting cell between two matched ``kind=="sweep"`` records.
+
+    Returns ``(policy, metric, cell, base_mean, new_mean)`` rows — one per
+    out-of-tolerance cell, not just the first, so the failure report is a
+    complete regression table.  ``cell is None`` flags a shape/coverage
+    change (missing policy/metric or a cell-count mismatch)."""
     drifts = []
     for policy, by_metric in (base.get("cells") or {}).items():
         new_by_metric = (new.get("cells") or {}).get(policy)
         if new_by_metric is None:
-            drifts.append((policy, "<missing policy>", None, None))
+            drifts.append((policy, "<missing policy>", None, None, None))
             continue
         for metric, stats in by_metric.items():
             new_stats = new_by_metric.get(metric)
             if new_stats is None:
-                drifts.append((policy, metric, None, None))
+                drifts.append((policy, metric, None, None, None))
                 continue
             b, n = _flat(stats["mean"]), _flat(new_stats["mean"])
             if len(b) != len(n):
-                drifts.append((policy, metric, None, None))
+                drifts.append((policy, metric, None, None, None))
                 continue
-            for bv, nv in zip(b, n, strict=True):
+            for i, (bv, nv) in enumerate(zip(b, n, strict=True)):
                 if abs(nv - bv) > atol + rtol * abs(bv):
-                    drifts.append((policy, metric, bv, nv))
-                    break
+                    drifts.append((policy, metric, i, bv, nv))
     return drifts
+
+
+def _drift_table(drifts) -> list[str]:
+    """Aligned per-cell rows for a drift failure report."""
+    rows = [f"{'policy':<10s} {'metric':<22s} {'cell':>4s} "
+            f"{'baseline':>14s} {'new':>14s} {'rel-err':>9s}"]
+    for policy, metric, i, bv, nv in drifts:
+        if i is None:
+            rows.append(f"{policy:<10s} {metric:<22s} {'-':>4s} "
+                        "shape/coverage changed")
+        else:
+            rel = abs(nv - bv) / max(abs(bv), 1e-300)
+            rows.append(f"{policy:<10s} {metric:<22s} {i:4d} "
+                        f"{bv:14.6g} {nv:14.6g} {rel:9.2e}")
+    return rows
 
 
 def _flat(x) -> list[float]:
@@ -135,17 +172,15 @@ def diff(base_records: list[dict], new_records: list[dict], *,
         elif bw > 0:
             notes.append(f"wall {nw / bw:.2f}x ({bw:.2f}s -> {nw:.2f}s): {label}")
         if base.get("kind") == "sweep":
-            for policy, metric, bv, nv in _metric_drifts(base, new, rtol, atol):
-                if bv is None:
-                    failures.append(
-                        f"metric shape/coverage changed: {label} "
-                        f"{policy}/{metric}"
-                    )
-                else:
-                    failures.append(
-                        f"metric mean drift: {label} {policy}/{metric} "
-                        f"{bv!r} -> {nv!r}"
-                    )
+            drifts = _metric_drifts(base, new, rtol, atol)
+            if drifts:
+                n_cells = sum(1 for d in drifts if d[2] is not None)
+                n_shape = len(drifts) - n_cells
+                head = (f"metric drift: {label} — {n_cells} cell(s) "
+                        f"out of tolerance")
+                if n_shape:
+                    head += f", {n_shape} shape/coverage change(s)"
+                failures.append("\n".join([head, *_drift_table(drifts)]))
     for key, new in new_ix.items():
         if key not in base_ix:
             notes.append(f"new record (no baseline): {_label(new)}")
@@ -197,7 +232,10 @@ def main(argv: list[str]) -> int:
     for line in notes:
         print(f"  note: {line}")
     for line in failures:
-        print(f"  FAIL: {line}")
+        head, *rest = line.split("\n")
+        print(f"  FAIL: {head}")
+        for row in rest:
+            print(f"        {row}")
     print(f"bench-diff: {len(failures)} failure(s), {len(notes)} note(s)")
     return 1 if failures else 0
 
