@@ -28,6 +28,15 @@ counts are *measured from the compiled HLO* via
 headline acceptance number is the fused-vs-seed per-event allocate
 speedup on CPU (target >= 1.5x, driven by the sort-count reduction).
 
+A second section profiles the *closed-form superstep* path
+(``core/superstep.py``) against the per-event scans on two lanes — a
+pre-arrived batch (zero scan steps: the Thm-3/8 closed form directly) and
+a Poisson arrival stream (M+1 scan steps vs the generic/ranked 2M) — with
+events-per-second and scan-trip-count columns, and logs one
+``kind="profile_superstep"`` record per lane carrying the
+``superstep_speedup_wall`` ratio (targets: >= 10x batch, >= 1.5x Poisson
+vs the generic scan).
+
 ``python -m benchmarks.profile_engine [--smoke] [--json]``; also runs as a
 section of ``benchmarks/run.py`` (including ``--smoke``), logging a
 ``kind="profile_engine"`` record into the ``BENCH_sweeps.json`` trajectory.
@@ -261,13 +270,126 @@ def run(m: int = 4096, engine_m: int = 1024, p: float = 0.5,
     return rows, engine_rows, result
 
 
+def run_superstep_lanes(m: int = 1000, p: float = 0.5,
+                        n_servers: float = 64.0, rate: float = 1.0,
+                        repeats: int = 5, log: bool = True):
+    """Closed-form superstep vs the per-event scans, two lanes.
+
+    - ``batch``: pre-arrived M jobs.  The generic scan walks M departure
+      events; the superstep path is the zero-scan batch closed form
+      (Thm 3/8 vectorized) — acceptance target >= 10x wall.
+    - ``poisson``: M Poisson arrivals.  Generic and ranked scans walk
+      2M events (admit + departure); the superstep scan walks M+1 steps
+      (one per arrival, departures analytic) — target >= 1.5x end-to-end
+      vs the generic scan (the ranked ratio is recorded for honesty: it
+      already dodges the per-event sort, so the superstep's win there is
+      the halved trip count and the transcendental-free body).
+
+    Wall ratios land in ``BENCH_sweeps.json`` as ``superstep_speedup_wall``
+    under ``kind="profile_superstep"`` records (one per lane).  Those ride
+    tools/bench_diff.py's wall-time gate; the speedup *metrics* are
+    machine-relative, deliberately outside the drift gate (same convention
+    as the fused-allocate ratios above).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+    from repro.core.policies import make_policy, make_rank_policy
+    from repro.core.scenarios import pareto_sizes, poisson_arrivals
+    from repro.core.superstep import run_superstep
+    from repro.core.sweeps import RUN_LOG, SweepResult
+
+    key = jax.random.PRNGKey(0)
+    kx, ka = jax.random.split(key)
+    x = pareto_sizes(kx, m).astype(jnp.float64)
+    rule = engine.continuous_rule(
+        make_policy("hesrpt"), n_servers=n_servers, dtype=x.dtype
+    )
+    rank_pol = make_rank_policy("hesrpt")
+
+    lanes = []
+    for lane, arr, pre in (
+        ("batch", jnp.zeros(m, x.dtype), True),
+        ("poisson", poisson_arrivals(ka, m, rate).astype(x.dtype), False),
+    ):
+        t_start = time.perf_counter()
+        n_events = m if pre else 2 * m  # generic scan horizon
+        n_steps_ss = 0 if pre else m + 1  # superstep trips (+1 drain step)
+        # run_ranked has no pre_arrived shortcut — its batch lane walks
+        # the full 2M admit+departure horizon (recorded as its trip count).
+        n_trips_ranked = 2 * m
+
+        def f_generic(x0, at, *, _pre=pre):
+            return engine.run(
+                x0, at, p, rule, pre_arrived=_pre
+            ).completion_times
+
+        def f_ranked(x0, at):
+            return engine.run_ranked(x0, at, p, n_servers, rank_pol)
+
+        def f_superstep(x0, at, *, _pre=pre):
+            return run_superstep(
+                x0, at, p, n_servers, "hesrpt", pre_arrived=_pre
+            ).completion_times
+
+        variants = [
+            ("generic", f_generic, n_events),
+            ("ranked", f_ranked, n_trips_ranked),
+            ("superstep", f_superstep, n_steps_ss),
+        ]
+        rows, stats = [], {}
+        for name, f, trips in variants:
+            import jax as _jax
+
+            us = _time(_jax.jit(f), x, arr, repeats=repeats)
+            best = float(us.min())
+            ev_per_s = n_events / (best * 1e-6)  # events resolved, not trips
+            rows.append((name, trips, best, ev_per_s, us))
+            stats[f"{name}_us"] = us.reshape(1, -1)
+            stats[f"{name}_scan_trips"] = np.array([[float(trips)]])
+            stats[f"{name}_events_per_s"] = np.array([[ev_per_s]])
+        by = {name: best for name, _t, best, _e, _u in rows}
+        stats["superstep_speedup_wall"] = np.array(
+            [[by["generic"] / by["superstep"]]]
+        )
+        stats["superstep_speedup_vs_ranked"] = np.array(
+            [[by["ranked"] / by["superstep"]]]
+        )
+        result = SweepResult(
+            spec={
+                "kind": "profile_superstep",
+                "lane": lane,
+                "m": m,
+                "p": p,
+                "n_servers": n_servers,
+                "rate": None if pre else rate,
+                "repeats": repeats,
+                "policy": "hesrpt",
+            },
+            stats={"hesrpt": stats},
+            wall_s=time.perf_counter() - t_start,
+            compile_s=0.0,
+            backend=jax.default_backend(),
+            device_count=jax.device_count(),
+            chunk_seeds=None,
+            sharded=False,
+        )
+        if log:
+            RUN_LOG.append(result.record())
+        lanes.append((lane, rows, result))
+    return lanes
+
+
 def main(smoke: bool = False):
     if smoke:
         rows, engine_rows, res = run(
             m=512, engine_m=256, repeats=5, n_chips=256
         )
+        ss_lanes = run_superstep_lanes(m=1000, repeats=3)
     else:
         rows, engine_rows, res = run()
+        ss_lanes = run_superstep_lanes()
     spec = res.spec
     lines = [
         f"components at M={spec['m']}, n_chips={spec['n_chips']}, "
@@ -305,6 +427,34 @@ def main(smoke: bool = False):
         f"{vs_unfused:.2f}x"
     )
     lines.append(f"engine.run speedup (fused vs unfused): {eng:.2f}x")
+
+    for lane, lrows, lres in ss_lanes:
+        lst = lres.stats["hesrpt"]
+        ss_m = lres.spec["m"]
+        lines.append("")
+        lines.append(
+            f"superstep lane '{lane}' at M={ss_m} (continuous heSRPT, "
+            f"N={lres.spec['n_servers']:.0f}):"
+        )
+        lines.append(
+            f"{'variant':>22s} {'scan-trips':>10s} {'us_min':>10s} "
+            f"{'events/s':>12s}"
+        )
+        for name, trips, best, ev_per_s, _us in lrows:
+            lines.append(
+                f"{name:>22s} {trips:10d} {best:10.1f} {ev_per_s:12.3g}"
+            )
+        wall = float(lst["superstep_speedup_wall"][0, 0])
+        vs_ranked = float(lst["superstep_speedup_vs_ranked"][0, 0])
+        target = 10.0 if lane == "batch" else 1.5
+        lines.append(
+            f"superstep speedup (vs generic scan): {wall:.2f}x "
+            f"[target >= {target:.1f}x: "
+            f"{'PASS' if wall >= target else 'MISS'}]"
+        )
+        lines.append(
+            f"superstep speedup (vs ranked scan):  {vs_ranked:.2f}x"
+        )
     return "\n".join(lines), res
 
 

@@ -14,6 +14,9 @@ keeps the historical public API —
 - :func:`simulate_online` — generic sort-per-event path for any policy,
 - :func:`simulate_online_ranked` — sort-free incremental-rank fast path for
   rank-space policies (heSRPT/EQUI/SRPT),
+- :func:`simulate_online_superstep` — the closed-form arrival-superstep
+  path (``core/superstep.py``): one scan step per arrival instead of per
+  event, zero for batches,
 - :func:`simulate_online_quantized` — whole-chips allocation (the
   ``ClusterScheduler`` integer regime) in the same scan,
 - :func:`load_sweep` / :func:`load_sweep_raw` — seeds × loads sweeps for
@@ -134,6 +137,43 @@ def simulate_online_ranked(
         x0, arrival_times, p, n_servers, rank_policy, horizon=horizon
     )
     return _finalize(x0, arrival_times, times, p, n_servers)
+
+
+def simulate_online_superstep(
+    x0: jax.Array,
+    arrival_times: jax.Array,
+    p: jax.Array,
+    n_servers: jax.Array,
+    policy: str = "hesrpt",
+    *,
+    weights: jax.Array | None = None,
+    pre_arrived: bool = False,
+    horizon: int | None = None,
+    p_drift=None,
+) -> OnlineSimResult:
+    """Closed-form superstep fast path of ``simulate_online``.
+
+    One scan step per arrival (plus one per drift boundary) instead of one
+    per event, and zero steps for ``pre_arrived`` batches — every departure
+    inside an inter-arrival gap is computed analytically from the Thm-3/8
+    bracket geometry.  ``policy`` is a name from
+    ``core.superstep.SUPERSTEP_POLICIES`` (heSRPT/EQUI/SRPT and the
+    cumulative-weight ``weighted_hesrpt``, which reads per-job
+    ``weights``).  See ``core/superstep.py`` for the supported-config
+    decision table; everything else raises at trace time and takes
+    :func:`simulate_online` / :func:`simulate_scenario`.
+    """
+    from repro.core.superstep import run_superstep
+
+    x0 = jnp.asarray(x0)
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arrival_times = jnp.asarray(arrival_times).astype(dtype)
+    res = run_superstep(
+        x0, arrival_times, p, n_servers, policy, weights=weights,
+        pre_arrived=pre_arrived, horizon=horizon, p_drift=p_drift,
+    )
+    return _finalize(x0, arrival_times, res.completion_times, p, n_servers)
 
 
 def simulate_online_quantized(

@@ -59,7 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flowtime import speedup
-from repro.core.policies import Policy, hesrpt, knee
+from repro.core.policies import Policy, equi, hesrpt, knee, srpt
 from repro.core.ranking import inv_rank
 
 # (x_active, p) -> (alloc, rate); ``alloc`` is theta for continuous rules
@@ -230,7 +230,11 @@ def continuous_rule(
 
     For the heSRPT policy the returned rule carries a ``fused_variant``
     attribute — the ``kernels/alloc.py`` fused path :func:`run` swaps in
-    under ``fused=True`` (bit-for-bit on CPU, on-chip on TPU).
+    under ``fused=True`` (bit-for-bit on CPU, on-chip on TPU).  For the
+    noise-free rank family (heSRPT/EQUI/SRPT) it also carries a
+    ``superstep_spec`` — the closed-form arrival-superstep path
+    (``core/superstep.py``) :func:`run` dispatches to under
+    ``superstep=True``.
     """
 
     def rule(x_act, p):
@@ -241,6 +245,13 @@ def continuous_rule(
             dtype=dtype,
         )
 
+    if size_factors is None and p_hat is None:
+        # Estimation noise desynchronizes the policy's ranking from the
+        # physics, which breaks the closed form's departure-order premise.
+        for fn, sname in ((hesrpt, "hesrpt"), (equi, "equi"), (srpt, "srpt")):
+            if policy is fn:
+                setattr(rule, "superstep_spec", (sname, n_servers))  # noqa: B010
+                break
     if policy is hesrpt:
         from repro.kernels.alloc import hesrpt_theta_fused
 
@@ -363,6 +374,49 @@ def _resolve_fused(rule, fused: bool):
     return fused_rule
 
 
+def _resolve_superstep(rule, *, fused, record, telemetry, p, p_drift):
+    """Trace-time gate for ``run(superstep=True)``.
+
+    Returns the rule's ``(policy_name, n_servers)`` superstep spec, or
+    raises ``ValueError`` for every configuration whose physics the
+    closed form cannot represent — those take the generic per-event scan
+    (just drop ``superstep=True``; see ``core/superstep.py`` for the
+    decision table).
+    """
+    fallback = " — this configuration takes the generic per-event scan"
+    spec = getattr(rule, "superstep_spec", None)
+    if spec is None:
+        raise ValueError(
+            "superstep=True needs a rule with a superstep_spec — built by "
+            "continuous_rule over heSRPT/EQUI/SRPT without estimation "
+            "noise (quantized and stateful/estimating rules have none)"
+            + fallback
+        )
+    if fused:
+        raise ValueError(
+            "superstep=True already replaces the scan; fused= fuses the "
+            "quantized per-event allocate" + fallback
+        )
+    if record:
+        raise ValueError(
+            "record=True needs the per-event trajectory" + fallback
+        )
+    if telemetry is not None:
+        raise ValueError(
+            "telemetry probes ride the per-event scan" + fallback
+        )
+    if jnp.ndim(p) >= 1:
+        raise ValueError(
+            "superstep=True needs a scalar p (per-job exponents break the "
+            "rank-order departure invariant)" + fallback
+        )
+    if p_drift is not None and jnp.asarray(p_drift.values).ndim != 1:
+        raise ValueError(
+            "superstep=True supports scalar drift regimes only" + fallback
+        )
+    return spec
+
+
 # ------------------------------------------------------------ the event scan
 def run(
     x0: jax.Array,
@@ -377,6 +431,7 @@ def run(
     record: bool = False,
     p_drift: PDrift | None = None,
     fused: bool = False,
+    superstep: bool = False,
     telemetry: Any = None,
 ) -> EngineResult:
     """Run the event-driven fluid trajectory to completion in one scan.
@@ -421,6 +476,16 @@ def run(
     (chip-exact; see that module for the collapse) — and raises
     ``ValueError`` for rules without one.
 
+    ``superstep=True`` dispatches to the closed-form arrival-superstep
+    path (``core/superstep.py``): zero scan steps for ``pre_arrived``
+    batches, one step per arrival/drift boundary online — for the rules
+    that carry a ``superstep_spec`` (:func:`continuous_rule` over
+    heSRPT/EQUI/SRPT, noise-free).  Everything else — quantized chips,
+    stateful/estimating rules, per-job ``p``, per-job drift rows,
+    ``record``, ``telemetry``, ``fused`` — raises at trace time and takes
+    this generic per-event scan instead.  ``rel_tol`` is ignored there
+    (the analytic trajectory has no float residue to clamp).
+
     ``telemetry`` takes a probe (``core/telemetry.py``: ``(init, step,
     finalize)``) whose state rides in the scan carry; each step sees the
     epoch's :class:`ProbeEvent` and the finalized read-out is returned on
@@ -429,6 +494,18 @@ def run(
     free scan — trajectories stay bit-for-bit identical (tested against
     the golden pins).
     """
+    if superstep:
+        pol_name, n_srv = _resolve_superstep(
+            rule, fused=fused, record=record, telemetry=telemetry, p=p,
+            p_drift=p_drift,
+        )
+        from repro.core.superstep import run_superstep
+
+        return run_superstep(
+            x0, arrival_times, p, n_srv, pol_name,
+            pre_arrived=pre_arrived, horizon=horizon, t0=t0,
+            p_drift=p_drift,
+        )
     rule = _resolve_fused(rule, fused)
     x0 = jnp.asarray(x0)
     M = x0.shape[0]

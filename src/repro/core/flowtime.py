@@ -137,46 +137,105 @@ def optimal_makespan(x: jax.Array, p: jax.Array, n_servers: jax.Array) -> jax.Ar
     return norm / speedup(n_servers, p)
 
 
+# ----------------------------------------------- rank-space bracket geometry
+#
+# The whole power-law family (heSRPT / EQUI / weighted brackets) shares one
+# structural fact: with ``c = 1/(1-p)`` and per-rank bracket numerators
+# ``a_r`` (heSRPT: r^c - (r-1)^c; EQUI: 1; weighted: W_r^c - W_{r-1}^c),
+# the allocation while ``m`` jobs are active is ``theta_r = a_r / A_m``
+# with ``A_m = sum_{j<=m} a_j``, so the service rate of rank ``r`` is
+# ``(a_r/A_m)^p s(N)``.  Because ``c p = c - 1``, the *ratios* of rates
+# across ranks never depend on ``m`` — each departure rescales every rate
+# by the same factor.  In the virtual time ``tau`` with ``dtau/dt =
+# s(N) / A_m^p``, every rank therefore shrinks linearly, ``x_r(tau) =
+# x_r - a_r^p tau``, for its whole lifetime: rank ``r`` departs at ``tau =
+# v_r := x_r / a_r^p`` (non-increasing in ``r`` for descending sizes), and
+# the epoch with ``m`` jobs active spans ``tau`` in ``[v_{m+1}, v_m]``
+# (``v_{m+1} := 0``), i.e. wall-clock ``delta_m = (v_m - v_{m+1}) A_m^p /
+# s(N)``.  Completion times are suffix sums ``T_r = sum_{j>=r} delta_j``
+# — one O(M) pass, no per-departure recursion.  SRPT is the degenerate
+# bracket (all of N to rank m): ``delta_r = x_r / s(N)`` directly.
+#
+# This geometry is what ``core/superstep.py`` scans over arrivals only;
+# here it replaces the per-departure recursion of the original
+# ``hesrpt_completion_times``.
+
+
+def rank_bracket_powers(
+    M: int, p, policy: str = "hesrpt", *, weights_rank=None, dtype=jnp.float64
+) -> tuple[jax.Array, jax.Array]:
+    """``(a_r^p, A_r^p)`` for descending-size ranks ``r = 1..M``.
+
+    ``policy`` is ``"hesrpt"`` (``a_r = r^c - (r-1)^c``), ``"equi"``
+    (``a_r = 1``) or ``"weighted_hesrpt"`` (``a_r = W_r^c - W_{r-1}^c``
+    with ``weights_rank`` the per-rank weights, cumulated here).  SRPT has
+    no bracket form — its epoch geometry is handled directly by the
+    callers.  ``1 + c p = c`` collapses every ``A_r^p`` to a single power.
+    """
+    c = 1.0 / (1.0 - p)
+    if policy == "equi":
+        r = jnp.arange(1, M + 1, dtype=dtype)
+        return jnp.ones(M, dtype), r ** p
+    if policy == "hesrpt":
+        r = jnp.arange(0, M + 1, dtype=dtype)
+        rc = r ** c
+        return (rc[1:] - rc[:-1]) ** p, r[1:] ** (c - 1.0)
+    if policy == "weighted_hesrpt":
+        if weights_rank is None:
+            raise ValueError("weighted_hesrpt bracket powers need weights_rank")
+        W = jnp.cumsum(jnp.asarray(weights_rank, dtype))
+        Wc = W ** c
+        gap = Wc - jnp.concatenate([jnp.zeros(1, dtype), Wc[:-1]])
+        # Ranks past the active set may carry zero weight; keep their a^p
+        # finite (they are masked out by every caller).
+        return jnp.maximum(gap, 0.0) ** p, jnp.maximum(W, 0.0) ** (c - 1.0)
+    raise ValueError(f"no bracket form for policy {policy!r}")
+
+
+def epoch_schedule(
+    x_rank: jax.Array,
+    ap: jax.Array,
+    Ap: jax.Array,
+    rank_active: jax.Array,
+    p,
+    n_servers,
+    *,
+    srpt: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Virtual departure thresholds ``v_r`` and completion offsets ``T_r``.
+
+    ``x_rank[r-1]`` is the remaining size of the rank-``r`` job (descending
+    sizes, ``rank_active`` masking ranks ``1..m``); ``(ap, Ap)`` come from
+    :func:`rank_bracket_powers`.  Returns ``(v, T)`` where ``T[r-1]`` is
+    the wall-clock offset (from now) at which rank ``r`` departs — the
+    suffix sums of the per-epoch durations — and ``v`` the virtual-time
+    thresholds (zeros for SRPT, whose epochs are served sequentially).
+    """
+    sN = speedup(jnp.asarray(n_servers, x_rank.dtype), p)
+    if srpt:
+        v = jnp.zeros_like(x_rank)
+        delta = jnp.where(rank_active, x_rank, 0.0) / sN
+    else:
+        v = jnp.where(rank_active, x_rank / ap, 0.0)
+        v_next = jnp.concatenate([v[1:], jnp.zeros(1, v.dtype)])
+        # Rounding can leave (v_r - v_{r+1}) at -eps on exact size ties.
+        delta = jnp.maximum(v - v_next, 0.0) * jnp.where(rank_active, Ap, 0.0)
+        delta = delta / sN
+    T = jnp.flip(jnp.cumsum(jnp.flip(delta)))
+    return v, T
+
+
 def hesrpt_completion_times(
     x_desc: jax.Array, p: jax.Array, n_servers: jax.Array
 ) -> jax.Array:
     """Per-job completion times under heSRPT (jobs indexed largest..smallest).
 
-    Derived epoch-by-epoch: while ``m`` jobs remain (jobs ``1..m``), job ``i``
-    holds ``theta_i(m) = (i/m)^c - ((i-1)/m)^c`` and the *smallest* active job
-    (rank m) departs next.  Between the departure of job ``m+1`` and job
-    ``m``, every active job's remaining size shrinks at rate
-    ``s(theta_i(m) N)``.  This runs the recursion in closed form (it is the
-    fluid trajectory, not a numerical integration).
+    The Theorem-3 epoch recursion in closed form: one O(M) suffix-sum pass
+    over the rank-space bracket geometry (see :func:`epoch_schedule`) —
+    the per-departure ``lax.scan`` this function used to run is gone.
     """
-    M = x_desc.shape[0]
-    c = 1.0 / (1.0 - p)
-
-    def theta(i, m):  # i, m float arrays; rank i in 1..m
-        return (i / m) ** c - ((i - 1.0) / m) ** c
-
     x = x_desc.astype(jnp.result_type(x_desc.dtype, jnp.float32))
-    t = jnp.zeros((), x.dtype)
-    times = jnp.zeros(M, x.dtype)
-
-    def body(carry, m):
-        # m runs M, M-1, ..., 1 (number of active jobs this epoch).
-        x, t, times = carry
-        mf = m.astype(x.dtype)
-        i = jnp.arange(1, M + 1, dtype=x.dtype)
-        active = i <= mf
-        th = jnp.where(active, theta(jnp.minimum(i, mf), mf), 0.0)
-        rate = speedup(th * n_servers, p)
-        # Smallest active job is rank m; it departs next.
-        x_small = x[m - 1]
-        r_small = rate[m - 1]
-        dt = x_small / r_small
-        x = jnp.where(active, jnp.maximum(x - dt * rate, 0.0), x)
-        t = t + dt
-        times = times.at[m - 1].set(t)
-        return (x, t, times), None
-
-    (x, t, times), _ = jax.lax.scan(
-        body, (x, t, times), jnp.arange(M, 0, -1, dtype=jnp.int32)
-    )
-    return times
+    M = x.shape[0]
+    ap, Ap = rank_bracket_powers(M, p, "hesrpt", dtype=x.dtype)
+    _, T = epoch_schedule(x, ap, Ap, jnp.ones(M, bool), p, n_servers)
+    return T

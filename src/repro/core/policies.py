@@ -371,9 +371,11 @@ def make_policy(name: str, *, n_servers: float = 1.0, alpha: float = 1.0) -> Pol
     if name == "helrpt":
         return helrpt
     if name == "srpt":
-        return lambda x, p: srpt(x, p)
+        # Returned unwrapped so identity checks (the engine's superstep
+        # attachment) see the registry function, same as heSRPT.
+        return srpt
     if name == "equi":
-        return lambda x, p: equi(x, p)
+        return equi
     if name == "hell":
         return functools.partial(hell, n_servers=jnp.asarray(n_servers))
     if name == "waterfill":

@@ -1,0 +1,393 @@
+"""Closed-form epoch fusion: the arrival-superstep fast path.
+
+The generic engine (``core/engine.py::run``) pays one ``lax.scan`` step —
+a full ``rule.allocate`` over all M slots — for *every* event, departures
+included.  But for the continuous uniform-p power-law family the paper
+(Thm 3/4) and the slowdown companion (Thm 8, ``core/flowtime.py``) give
+the whole trajectory of an all-present batch in closed form, so every
+departure that falls between two arrivals is computable analytically.
+This module exploits that twice:
+
+- :func:`batch_result_closed_form` — the ``pre_arrived=True`` batch needs
+  **no scan at all**: one stable sort, one suffix-sum pass over the
+  rank-space bracket geometry (``flowtime.epoch_schedule``), O(M log M)
+  total, plus the closed-form remaining-size trajectory ``x_i(t)`` at any
+  requested evaluation times.
+
+- :func:`run_superstep` — online streams scan over **arrival (and
+  drift-boundary) events only**: each step treats the currently-present
+  jobs as a batch, computes every analytic departure offset in the
+  inter-arrival gap, counts how many land before the next arrival, and
+  advances every survivor through the gap in one closed-form update.
+  Scan length collapses from ``2M`` events to ``M + 1`` supersteps (plus
+  one per drift boundary).  Like ``engine.run_ranked`` it carries
+  descending-size ranks instead of sorting per step — departures always
+  drop the *highest* ranks, so survivors keep their ranks and an arrival
+  inserts one — and the per-rank bracket coefficients are precomputed
+  outside the scan, so a superstep body is pure O(M) elementwise work
+  with no sort and no transcendentals.
+
+Supported exactly here (everything else takes the generic per-event
+scan — ``engine.run`` raises at trace time pointing back to it):
+continuous allocation, scalar ``p`` (or scalar-regime :class:`PDrift`),
+the rank family heSRPT / EQUI / SRPT, and the cumulative-weight
+``weighted_hesrpt`` brackets (valid, like ``weighted_total_flowtime``,
+when weights are non-increasing in size so departures follow the size
+ranking; weighted + drift is not wired).  Quantized chips, stateful /
+estimating rules, estimation noise (``size_factors`` / ``p_hat``),
+per-job exponents, ``record=True`` traces and per-event telemetry all
+need the event-by-event scan.
+
+Tie semantics match ``run_ranked``: exactly-tied sizes get distinct
+adjacent ranks (ties break by arrival order), so under SRPT per-job times
+permute within a tied group relative to the generic path's ``argmin``
+while totals are exchange-invariant; under heSRPT/EQUI the tied jobs'
+times agree.  A departure landing exactly on an arrival completes at the
+arrival instant, as in the generic scan.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import EngineResult, PDrift
+from repro.core.flowtime import epoch_schedule, rank_bracket_powers, speedup
+from repro.core.policies import size_ranks_desc
+
+SUPERSTEP_POLICIES = ("hesrpt", "equi", "srpt", "weighted_hesrpt")
+
+
+def _validate(policy: str, p, weights, p_drift) -> None:
+    """Trace-time gate: reject configs whose physics the closed form
+    cannot represent, pointing at the generic-scan fallback."""
+    if policy not in SUPERSTEP_POLICIES:
+        raise ValueError(
+            f"superstep path supports {SUPERSTEP_POLICIES}, got {policy!r} "
+            "— other policies take the generic per-event scan (engine.run)"
+        )
+    if policy == "weighted_hesrpt" and weights is None:
+        raise ValueError("weighted_hesrpt needs per-job weights")
+    if jnp.ndim(p) != 0:
+        raise ValueError(
+            "superstep path needs a scalar p — per-job exponents break the "
+            "rank-order departure invariant; use the generic engine.run scan"
+        )
+    if p_drift is not None:
+        if policy == "weighted_hesrpt":
+            raise ValueError(
+                "weighted_hesrpt + p_drift is not wired on the superstep "
+                "path; use the generic engine.run scan"
+            )
+        if jnp.asarray(p_drift.values).ndim != 1:
+            raise ValueError(
+                "superstep path needs scalar drift regimes — per-job drift "
+                "rows take the generic engine.run scan"
+            )
+
+
+def _bracket_powers(M, p, policy, dtype, weights_rank=None):
+    """(a_r^p, A_r^p) per rank, with SRPT's degenerate all-ones stand-in
+    (its epoch geometry never reads them)."""
+    if policy == "srpt":
+        one = jnp.ones(M, dtype)
+        return one, one
+    return rank_bracket_powers(
+        M, p, policy, weights_rank=weights_rank, dtype=dtype
+    )
+
+
+def _gap_advance(x_rank, v, T, ap, Ap, rank_active, dt, sN, *, srpt: bool):
+    """Advance the rank-space batch through an elapsed time ``dt``.
+
+    ``(v, T)`` from :func:`~repro.core.flowtime.epoch_schedule`.  Ranks
+    whose departure offset ``T_r <= dt`` go to zero; survivors move to
+    their exact analytic remaining size at ``dt``: for bracket policies
+    via the virtual time ``tau(dt) = v_{m'+1} + (dt - T_{m'+1}) s(N) /
+    A_{m'}^p`` (``m'`` the surviving count, ``x_r -> x_r - a_r^p tau``);
+    for SRPT only the currently-served rank ``m'`` shrinks, by the work
+    budget ``(dt - T_{m'+1}) s(N)``.  Returns ``(x_rank_new, departed)``.
+    """
+    M = x_rank.shape[0]
+    dep = rank_active & (T <= dt)
+    n_dep = jnp.sum(dep, dtype=jnp.int32)
+    m2 = jnp.sum(rank_active, dtype=jnp.int32) - n_dep
+    i_last = jnp.clip(m2, 0, M - 1)  # rank m2+1 <-> index m2
+    T_start = jnp.where(n_dep > 0, T[i_last], 0.0)
+    elapsed = jnp.maximum(dt - T_start, 0.0)
+    if srpt:
+        served = jnp.arange(M) == m2 - 1
+        x_new = jnp.where(served, x_rank - elapsed * sN, x_rank)
+    else:
+        v_start = jnp.where(n_dep > 0, v[i_last], 0.0)
+        tau = jnp.where(
+            m2 > 0, v_start + elapsed * sN / Ap[jnp.maximum(m2 - 1, 0)], 0.0
+        )
+        x_new = x_rank - ap * tau
+    return jnp.where(dep | ~rank_active, 0.0, jnp.maximum(x_new, 0.0)), dep
+
+
+class BatchClosedForm(NamedTuple):
+    completion_times: jax.Array  # [M] absolute, input order
+    sizes_at: jax.Array | None  # [K, M] remaining sizes at eval_times
+
+
+def batch_result_closed_form(
+    x: jax.Array,
+    p,
+    policy: str = "hesrpt",
+    *,
+    n_servers,
+    weights: jax.Array | None = None,
+    t0=0.0,
+    eval_times=None,
+) -> BatchClosedForm:
+    """Theorem-3/8 completion times and trajectory for an all-present batch.
+
+    One stable descending sort, then the O(M) suffix-sum geometry of
+    ``flowtime.epoch_schedule`` — no scan.  ``completion_times`` come back
+    in input order (zero-size jobs report ``0.0``, matching the generic
+    engine, which never activates them).  With ``eval_times`` (shape
+    ``[K]``, absolute), ``sizes_at[k, i]`` is job ``i``'s exact remaining
+    size at ``eval_times[k]`` — the closed-form ``x_i(t)``.
+
+    ``policy`` is one of :data:`SUPERSTEP_POLICIES`; ``weighted_hesrpt``
+    reads per-job ``weights`` (input order) and is exact when weights are
+    non-increasing in size (``sum_i w_i T_i`` then equals
+    ``flowtime.weighted_total_flowtime``).
+    """
+    _validate(policy, p, weights, None)
+    x = jnp.asarray(x)
+    dtype = jnp.result_type(x.dtype, jnp.float32)
+    x = x.astype(dtype)
+    M = x.shape[0]
+    order = jnp.argsort(-x)  # stable: ties by index, zeros last
+    x_desc = x[order]
+    rank_active = x_desc > 0
+    srpt = policy == "srpt"
+    w_rank = None
+    if policy == "weighted_hesrpt":
+        w_rank = jnp.where(
+            rank_active, jnp.asarray(weights, dtype)[order], 0.0
+        )
+    ap, Ap = _bracket_powers(M, p, policy, dtype, weights_rank=w_rank)
+    v, T = epoch_schedule(x_desc, ap, Ap, rank_active, p, n_servers, srpt=srpt)
+    t0 = jnp.asarray(t0, dtype)
+    times = jnp.zeros(M, dtype).at[order].set(
+        jnp.where(rank_active, t0 + T, 0.0)
+    )
+    sizes = None
+    if eval_times is not None:
+        sN = speedup(jnp.asarray(n_servers, dtype), p)
+        ts = jnp.atleast_1d(jnp.asarray(eval_times, dtype))
+
+        def at(tq):
+            x_new, _ = _gap_advance(
+                x_desc, v, T, ap, Ap, rank_active,
+                jnp.maximum(tq - t0, 0.0), sN, srpt=srpt,
+            )
+            return jnp.zeros(M, dtype).at[order].set(x_new)
+
+        sizes = jax.vmap(at)(ts)
+    return BatchClosedForm(completion_times=times, sizes_at=sizes)
+
+
+def run_superstep(
+    x0: jax.Array,
+    arrival_times: jax.Array,
+    p,
+    n_servers,
+    policy: str = "hesrpt",
+    *,
+    weights: jax.Array | None = None,
+    pre_arrived: bool = False,
+    horizon: int | None = None,
+    t0=0.0,
+    p_drift: PDrift | None = None,
+) -> EngineResult:
+    """The arrival-superstep scan: one step per arrival / drift boundary.
+
+    Same contract as ``engine.run`` over ``continuous_rule`` for the
+    supported family (see the module docstring), same
+    :class:`~repro.core.engine.EngineResult` shape (``trace`` and
+    ``telemetry`` always ``None``).  ``pre_arrived=True`` without drift
+    needs **zero** scan steps (:func:`batch_result_closed_form`); online
+    streams need ``M + 1`` (+ one per drift boundary) instead of the
+    generic ``2M`` — the default horizon.  A superstep admits one arrival,
+    so simultaneous arrivals each take a (zero-gap) step of their own.
+    """
+    _validate(policy, p, weights, p_drift)
+    x0 = jnp.asarray(x0)
+    M = x0.shape[0]
+    dtype = jnp.result_type(x0.dtype, jnp.float32)
+    x0 = x0.astype(dtype)
+    arrival_times = jnp.asarray(arrival_times).astype(dtype)
+    order = jnp.argsort(arrival_times)
+
+    if pre_arrived and p_drift is None:
+        batch = batch_result_closed_form(
+            x0, p, policy, n_servers=n_servers, weights=weights, t0=t0
+        )
+        return EngineResult(
+            completion_times=batch.completion_times,
+            x_final=jnp.zeros(M, dtype),
+            order=order,
+            trace=None,
+            telemetry=None,
+        )
+
+    arr = arrival_times[order]
+    xs = x0[order]
+    idx = jnp.arange(M)
+    srpt = policy == "srpt"
+    weighted = policy == "weighted_hesrpt"
+    n_drift = 0 if p_drift is None else p_drift.times.shape[0]
+    E = ((0 if pre_arrived else M) + n_drift + 1) if horizon is None else horizon
+
+    w_arr = None
+    if weighted:
+        w_arr = jnp.asarray(weights, dtype)[order]
+    if p_drift is None:
+        ap_c, Ap_c = (None, None) if weighted else _bracket_powers(
+            M, p, policy, dtype
+        )
+    else:
+        drift_t = jnp.asarray(p_drift.times).astype(dtype)
+        drift_v = jnp.asarray(p_drift.values).astype(dtype)
+        ap_tab, Ap_tab = jax.vmap(
+            lambda pv: _bracket_powers(M, pv, policy, dtype)
+        )(drift_v)
+
+    if pre_arrived:
+        ranks0 = size_ranks_desc(xs)
+        m0 = jnp.sum(xs > 0, dtype=jnp.int32)
+        i0 = jnp.asarray(M, jnp.int32)
+        # Descending sort puts the zero-size (never-active) jobs last —
+        # exactly the rank layout size_ranks_desc assigns.
+        x_rank0 = jnp.sort(xs)[::-1]
+        w_rank0 = (
+            jnp.zeros(M, dtype).at[
+                jnp.where(xs > 0, ranks0 - 1, M)
+            ].set(jnp.where(xs > 0, w_arr, 0.0), mode="drop")
+            if weighted else None
+        )
+    else:
+        ranks0 = jnp.zeros(M, jnp.int32)
+        m0 = jnp.zeros((), jnp.int32)
+        i0 = jnp.zeros((), jnp.int32)
+        x_rank0 = jnp.zeros(M, dtype)
+        w_rank0 = jnp.zeros(M, dtype) if weighted else None
+
+    def body(carry, _):
+        x_rank, w_rank, t, i, ranks, m, times = carry
+        active = ranks > 0
+        if p_drift is None:
+            p_now = p
+            ap, Ap = ap_c, Ap_c
+            t_next_drift = jnp.inf
+        else:
+            r = jnp.searchsorted(drift_t, t, side="right")
+            p_now = drift_v[r]
+            ap = ap_tab[r]
+            Ap = Ap_tab[r]
+            t_next_drift = jnp.where(
+                r < n_drift, drift_t[jnp.minimum(r, n_drift - 1)], jnp.inf
+            )
+        # The batch state lives *in rank space* across steps (no per-step
+        # scatter — XLA CPU serializes scatters at ~100x a gather's cost):
+        # departures always drop the highest ranks, i.e. zero a suffix of
+        # the active prefix, and an arrival inserts one slot via a
+        # shift-by-one gather below.  The carried job-space ranks only
+        # serve the per-job read-back of departure offsets.
+        rank_active = idx < m
+        if weighted:
+            ap, Ap = _bracket_powers(
+                M, p_now, policy, dtype, weights_rank=w_rank
+            )
+        v, T = epoch_schedule(
+            x_rank, ap, Ap, rank_active, p_now, n_servers, srpt=srpt
+        )
+        sN = speedup(jnp.asarray(n_servers, dtype), p_now)
+        # The gap to the next event; with none left, every active job
+        # departs analytically in this final drain step.
+        t_next_arr = jnp.where(i < M, arr[jnp.minimum(i, M - 1)], jnp.inf)
+        gap_arr = jnp.maximum(t_next_arr - t, 0.0)
+        gap_drift = jnp.maximum(t_next_drift - t, 0.0)
+        gap = jnp.minimum(gap_arr, gap_drift)
+        has_event = jnp.isfinite(gap)
+        dt_gap = jnp.where(has_event, gap, jnp.inf)
+        x_rank_adv, dep_rank = _gap_advance(
+            x_rank, v, T, ap, Ap, rank_active, dt_gap, sN, srpt=srpt
+        )
+        m2 = m - jnp.sum(dep_rank, dtype=jnp.int32)
+        # Per-job read-back through the carried ranks.
+        gslot = jnp.where(active, ranks - 1, 0)
+        T_job = T[gslot]
+        dep_job = active & (T_job <= dt_gap)
+        times = jnp.where(dep_job, t + T_job, times)
+        ranks = jnp.where(dep_job, 0, ranks)
+        # Clock: pin to the exact arrival / boundary time (so admission
+        # and the drift-regime lookup cannot miss it to rounding); on the
+        # final drain step jump to the last departure (T[0] is rank 1's).
+        t_new = jnp.where(
+            has_event,
+            jnp.where(gap_arr <= gap_drift, t_next_arr, t_next_drift),
+            t + T[0],
+        )
+        # Admission, as in run_ranked: insert job i at its rank among the
+        # survivors; every active job arrived earlier, so the arriving job
+        # loses exact-size ties (survivors with x == x_a count as ahead).
+        # Zero-size arrivals never activate (the generic scan's `x > 0`
+        # gate), but still consume their event.
+        admit = has_event & (gap_arr <= gap_drift)
+        i_c = jnp.minimum(i, M - 1)
+        x_a = xs[i_c]
+        r_a = 1 + jnp.sum(x_rank_adv >= x_a, dtype=jnp.int32)
+        place = admit & (x_a > 0)
+        bumped = jnp.where((ranks > 0) & (ranks >= r_a), ranks + 1, ranks)
+        inserted = bumped.at[i_c].set(r_a)
+        ranks = jnp.where(place, inserted, ranks)
+        # Rank-space insert: slots >= r_a shift right by one (the survivor
+        # suffix past the active prefix is all zeros, so the shift is safe).
+        shift = x_rank_adv[jnp.maximum(idx - 1, 0)]
+        ins_x = jnp.where(
+            idx == r_a - 1, x_a, jnp.where(idx < r_a - 1, x_rank_adv, shift)
+        )
+        x_rank = jnp.where(place, ins_x, x_rank_adv)
+        if weighted:
+            w_adv = jnp.where(idx < m2, w_rank, 0.0)
+            w_a = w_arr[i_c]
+            w_shift = w_adv[jnp.maximum(idx - 1, 0)]
+            ins_w = jnp.where(
+                idx == r_a - 1, w_a, jnp.where(idx < r_a - 1, w_adv, w_shift)
+            )
+            w_rank = jnp.where(place, ins_w, w_adv)
+        m = m2 + jnp.where(place, 1, 0)
+        i = i + jnp.where(admit, 1, 0)
+        return (x_rank, w_rank, t_new, i, ranks, m, times), None
+
+    init = (
+        x_rank0, w_rank0, jnp.asarray(t0, dtype), i0, ranks0, m0,
+        jnp.zeros(M, dtype),
+    )
+    (x_rank_fin, _, _, i_fin, ranks_fin, _, times), _ = jax.lax.scan(
+        body, init, None, length=E
+    )
+    # Never-departed (horizon cut) and never-admitted jobs report inf,
+    # matching the generic scan's safety net (admissions happen strictly
+    # in arrival order, so job j was admitted iff j < i_fin).
+    never_admitted = (idx >= i_fin) & (xs > 0)
+    times = jnp.where((ranks_fin > 0) | never_admitted, jnp.inf, times)
+    times_in = jnp.zeros(M, dtype).at[order].set(times)
+    # Remaining sizes in the generic result's (arrival-sorted) job order.
+    x_fin = jnp.where(
+        ranks_fin > 0,
+        x_rank_fin[jnp.where(ranks_fin > 0, ranks_fin - 1, 0)],
+        jnp.where(never_admitted, xs, 0.0),
+    )
+    return EngineResult(
+        completion_times=times_in, x_final=x_fin, order=order, trace=None,
+        telemetry=None,
+    )

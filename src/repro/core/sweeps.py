@@ -181,6 +181,7 @@ class Sweep(NamedTuple):
     fused: bool = False  # kernels/alloc.py fused allocate (quantized heSRPT)
     telemetry: tuple[str, ...] = ()  # in-scan probe metrics -> tel_* columns
     stream: tuple = ()  # bounded-slot regime: (("n_slots", S), ...) kv pairs
+    superstep: bool = False  # core/superstep.py closed-form arrival scan
 
     @classmethod
     def create(
@@ -206,6 +207,7 @@ class Sweep(NamedTuple):
         fused: bool = False,
         telemetry=(),
         stream: dict | tuple | None = None,
+        superstep: bool = False,
     ) -> "Sweep":
         from repro.core.arrivals import OnlineSimResult
         from repro.core.multiclass import as_specs
@@ -299,6 +301,41 @@ class Sweep(NamedTuple):
             bad = tuple(p for p in policies if p != "hesrpt")
             if bad:
                 raise ValueError(f"fused sweeps support only heSRPT, got {bad}")
+        if superstep:
+            # The closed-form superstep path (core/superstep.py) is exact
+            # only for the continuous, noise-free, scalar-p rank family;
+            # every other regime keeps its per-event scan.
+            if classes is not None or arm is not None:
+                raise ValueError("superstep sweeps are single-class, arm-free")
+            if n_chips is not None:
+                raise ValueError(
+                    "superstep=True is the continuous closed-form path "
+                    "(quantized chips need the per-event scan)"
+                )
+            if fused or telemetry or stream:
+                raise ValueError(
+                    "superstep sweeps take no fused/telemetry/stream "
+                    "options (all three ride the per-event scan)"
+                )
+            bad = tuple(q for q in policies if q not in ("hesrpt", "equi",
+                                                         "srpt"))
+            if bad:
+                raise ValueError(
+                    f"superstep sweeps support heSRPT/EQUI/SRPT, got {bad}"
+                )
+            skw_ss = dict(_hashable(scenario_kw or {}))
+            if _any_pos(skw_ss.get("sigma_size", 0.0)) or _any_pos(
+                skw_ss.get("sigma_p", 0.0)
+            ):
+                raise ValueError(
+                    "superstep sweeps need noise-free scenarios "
+                    "(estimation noise takes the generic scan)"
+                )
+            if scenario.startswith("multiclass_"):
+                raise ValueError(
+                    "superstep sweeps are single-class (per-job exponents "
+                    "take the generic scan)"
+                )
         if telemetry is True:
             telemetry = DEFAULT_METRICS
         telemetry = tuple(telemetry or ())
@@ -342,6 +379,7 @@ class Sweep(NamedTuple):
             fused=bool(fused),
             telemetry=telemetry,
             stream=stream,
+            superstep=bool(superstep),
         )
 
     def jobs_per_seed(self) -> int:
@@ -548,7 +586,11 @@ def _cell_fn(spec: Sweep, name: str):
 
         return one
 
-    from repro.core.arrivals import simulate_online_ranked, simulate_scenario
+    from repro.core.arrivals import (
+        simulate_online_ranked,
+        simulate_online_superstep,
+        simulate_scenario,
+    )
     from repro.core.policies import make_policy, make_rank_policy
     from repro.core.scenarios import _any_pos
 
@@ -561,10 +603,15 @@ def _cell_fn(spec: Sweep, name: str):
     # invariants; per-job exponents (``p_job``) and p-drift boundaries
     # (``p_drift``) are static per sampler, so the branch is resolved at
     # trace time.  Telemetry probes hook the generic scan's ProbeEvent,
-    # so a telemetry sweep takes that path too.
+    # so a telemetry sweep takes that path too.  ``spec.superstep``
+    # upgrades further, to the closed-form arrival-superstep scan
+    # (core/superstep.py — one step per arrival, departures analytic);
+    # Sweep.create has already pinned its supported envelope, including
+    # scalar-regime drift.
     rank_pol = (
         make_rank_policy(name)
         if spec.n_chips is None and not noisy and not spec.telemetry
+        and not spec.superstep
         else None
     )
     pol = make_policy(
@@ -576,7 +623,12 @@ def _cell_fn(spec: Sweep, name: str):
 
     def one(key, rate):
         scn = sampler(key, spec.n_jobs, rate)
-        if rank_pol is not None and scn.p_job is None and scn.p_drift is None:
+        if spec.superstep:
+            res = simulate_online_superstep(
+                scn.x0, scn.arrival_times, spec.p, spec.n_servers, name,
+                p_drift=scn.p_drift,
+            )
+        elif rank_pol is not None and scn.p_job is None and scn.p_drift is None:
             res = simulate_online_ranked(
                 scn.x0, scn.arrival_times, spec.p, spec.n_servers, rank_pol
             )
@@ -862,6 +914,7 @@ class SweepResult(NamedTuple):
             fused=s.get("fused", False),
             telemetry=s.get("telemetry", ()),
             stream=dict((k, _hashable(v)) for k, v in s.get("stream", [])),
+            superstep=s.get("superstep", False),
         )
         stats = {
             name: {m: np.asarray(v, dtype=np.float64) for m, v in by_m.items()}

@@ -12,6 +12,7 @@
   its line from KNOWN_FAILURES.md, and a regression breaks CI again.
 """
 
+import os
 import re
 from pathlib import Path
 
@@ -19,6 +20,20 @@ import jax
 import pytest
 
 jax.config.update("jax_enable_x64", True)
+
+# Persistent compilation cache (shared with benchmarks/run.py): the suite
+# compiles hundreds of distinct XLA programs; caching them on disk makes
+# repeat local runs and CI (which restores the directory via actions/cache)
+# skip recompilation.  JAX_COMPILATION_CACHE_DIR overrides the repo-local
+# default; threshold 0 caches even sub-second test-size programs.
+jax.config.update(
+    "jax_compilation_cache_dir",
+    os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR",
+        str(Path(__file__).resolve().parent.parent / ".jax_cache"),
+    ),
+)
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
 
 _KNOWN_FAILURES = Path(__file__).parent / "KNOWN_FAILURES.md"
 

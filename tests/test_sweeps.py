@@ -136,12 +136,26 @@ def _small_spec(**kw):
     return Sweep.create(pols, rates, **base)
 
 
-def test_chunked_equals_unchunked_every_chunk_size():
+@pytest.fixture(scope="module")
+def small_sweep_ref():
+    """One shared unchunked reference run of ``_small_spec()``.
+
+    Several tests below need "the plain vmap answer for the small spec" as
+    their comparison baseline; computing it per-test recompiled (and
+    re-ran) the same executor under slightly different n_seeds shapes.
+    Hoisting it means one compile + one run for the whole module — tests
+    that only need *a* reference (not a specific shape) use this spec.
+    """
+    spec = _small_spec()
+    return spec, run_sweep(spec, log=False)
+
+
+def test_chunked_equals_unchunked_every_chunk_size(small_sweep_ref):
     """Seeded twin of the hypothesis boundary-invariance property: every
     chunk size (including non-divisors of n_seeds, which exercise the pad
     + slice path, and chunk > n_seeds) reproduces the vmap bit-for-bit."""
-    spec = _small_spec()
-    ref = run_sweep(spec, log=False).stats["hesrpt"]["mean_flowtime"]
+    spec, res = small_sweep_ref
+    ref = res.stats["hesrpt"]["mean_flowtime"]
     for chunk in (1, 2, 3, 4, 5, 7):
         got = run_sweep(spec, chunk_seeds=chunk, log=False)
         np.testing.assert_array_equal(
@@ -161,8 +175,8 @@ def test_chunked_equals_unchunked_multiclass_metrics():
                                       ref.stats["hesrpt_pc"][m])
 
 
-def test_max_jobs_in_flight_budget_bounds_chunk():
-    spec = _small_spec()  # jobs_per_seed = 2 rates * 25 jobs = 50
+def test_max_jobs_in_flight_budget_bounds_chunk(small_sweep_ref):
+    spec, ref = small_sweep_ref  # jobs_per_seed = 2 rates * 25 jobs = 50
     assert resolve_chunk(spec, None, 200) == 4  # 200 // 50
     assert resolve_chunk(spec, None, 10) == 1  # floor: one seed per chunk
     assert resolve_chunk(spec, 3, None) == 3
@@ -174,7 +188,7 @@ def test_max_jobs_in_flight_budget_bounds_chunk():
     assert res.chunk_seeds * spec.jobs_per_seed() <= 200
     np.testing.assert_array_equal(
         res.stats["hesrpt"]["mean_flowtime"],
-        run_sweep(spec, log=False).stats["hesrpt"]["mean_flowtime"])
+        ref.stats["hesrpt"]["mean_flowtime"])
 
 
 def test_load_sweep_chunk_passthrough_identical():
@@ -225,10 +239,9 @@ def test_sharded_equals_single_device_forced_multidevice():
     assert "SHARDED_OK" in proc.stdout
 
 
-def test_sharded_on_single_device_is_noop_equal():
+def test_sharded_on_single_device_is_noop_equal(small_sweep_ref):
     """shard=True must also be safe (and exact) on a 1-device host."""
-    spec = _small_spec(n_seeds=3)
-    ref = run_sweep(spec, log=False)
+    spec, ref = small_sweep_ref
     got = run_sweep(spec, shard=True, log=False)
     np.testing.assert_array_equal(got.stats["hesrpt"]["mean_flowtime"],
                                   ref.stats["hesrpt"]["mean_flowtime"])
@@ -270,11 +283,10 @@ def test_rate_axis_sharded_equals_single_device_forced_multidevice():
     assert "RATE_SHARDED_OK" in proc.stdout
 
 
-def test_rate_axis_shard_validation_and_single_device_noop():
-    spec = _small_spec(n_seeds=2)
+def test_rate_axis_shard_validation_and_single_device_noop(small_sweep_ref):
+    spec, ref = small_sweep_ref
     with pytest.raises(ValueError, match="shard_axis"):
         run_sweep(spec, shard_axis="policies", log=False)
-    ref = run_sweep(spec, log=False)
     got = run_sweep(spec, shard=True, shard_axis="rates", log=False)
     np.testing.assert_array_equal(got.stats["hesrpt"]["mean_flowtime"],
                                   ref.stats["hesrpt"]["mean_flowtime"])
@@ -296,13 +308,12 @@ def test_sweep_result_json_round_trip_exact():
                                           res.stats[name][m])
 
 
-def test_sweep_result_record_and_cell_means():
-    spec = _small_spec(n_seeds=4)
-    res = run_sweep(spec, log=False)
+def test_sweep_result_record_and_cell_means(small_sweep_ref):
+    _, res = small_sweep_ref
     rec = res.record()
     json.dumps(rec)  # JSON-able as-is
     assert rec["kind"] == "sweep"
-    assert rec["total_jobs"] == 2 * 25 * 4  # rates * jobs * seeds (1 policy)
+    assert rec["total_jobs"] == 2 * 25 * 5  # rates * jobs * seeds (1 policy)
     means = rec["cells"]["hesrpt"]["mean_flowtime"]["mean"]
     np.testing.assert_allclose(
         means, np.mean(res.stats["hesrpt"]["mean_flowtime"], axis=1))
